@@ -1,0 +1,203 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is real CPU
+wall time where the benchmark executes something (the simulator throughput
+rows); cycle/bit/area rows are cycle-accurate simulator measurements
+(``derived`` column) with the build time as the timing column.
+
+Paper anchors:
+  fig6a_latency   — §5.1: 32-bit multiplication latency per model
+  fig6b_control   — §5.2: control-message bits (607/79/36 vs 30)
+  fig6c_area      — §5.3.2: algorithmic area (memristor columns)
+  energy          — §5.4: total gate count (serial vs parallel)
+  bounds          — §2.3/3.3/4.3: combinatorial lower bounds
+  sim_throughput  — crossbar-simulator throughput (real wall time)
+  dot_accumulate  — beyond-paper carry-save accumulator (before/after)
+  pim_lm_gemm     — the paper's technique applied to the assigned archs
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def _timed(fn):
+    t0 = time.time()
+    out = fn()
+    return (time.time() - t0) * 1e6, out
+
+
+def fig6a_latency() -> List[Row]:
+    from repro.pim.mult_serial import build_serial_multiplier
+    from repro.pim.multpim import build_multpim
+
+    rows: List[Row] = []
+    us, serial = _timed(lambda: build_serial_multiplier(32).program.stats())
+    rows.append(("fig6a/serial_cycles", us, str(serial.cycles)))
+    for model in ("unlimited", "standard", "minimal"):
+        us, st = _timed(lambda m=model: build_multpim(32, model=m)
+                        .program.stats())
+        rows.append((f"fig6a/{model}_cycles", us, str(st.cycles)))
+        rows.append((f"fig6a/{model}_speedup_vs_serial", 0.0,
+                     f"{serial.cycles / st.cycles:.2f}x (paper: 11/9.2/8.6x)"))
+    return rows
+
+
+def fig6b_control() -> List[Row]:
+    from repro.core import PartitionConfig, message_bits
+    from repro.pim.mult_serial import build_serial_multiplier
+    from repro.pim.multpim import build_multpim
+
+    cfg = PartitionConfig(1024, 32)
+    rows: List[Row] = []
+    for model, paper in (("baseline", 30), ("unlimited", 607),
+                         ("standard", 79), ("minimal", 36)):
+        bits = message_bits(model, cfg)
+        assert bits == paper, (model, bits, paper)
+        rows.append((f"fig6b/{model}_message_bits", 0.0,
+                     f"{bits} (paper: {paper})"))
+    serial_total = build_serial_multiplier(32).program.stats().total_control_bits
+    rows.append(("fig6b/serial_total_bits", 0.0, str(serial_total)))
+    for model in ("unlimited", "standard", "minimal"):
+        t = build_multpim(32, model=model).program.stats().total_control_bits
+        rows.append((f"fig6b/{model}_total_bits", 0.0,
+                     f"{t} ({t / serial_total:.2f}x of serial total)"))
+    return rows
+
+
+def fig6c_area() -> List[Row]:
+    from repro.pim.mult_serial import build_serial_multiplier
+    from repro.pim.multpim import build_multpim
+
+    serial = build_serial_multiplier(32).program.stats().area_columns
+    rows = [("fig6c/serial_area_columns", 0.0, str(serial))]
+    for model in ("unlimited", "standard", "minimal"):
+        a = build_multpim(32, model=model).program.stats().area_columns
+        rows.append((f"fig6c/{model}_area_columns", 0.0,
+                     f"{a} ({a / serial:.2f}x serial; paper ~1.4x)"))
+    return rows
+
+
+def energy() -> List[Row]:
+    from repro.pim.mult_serial import build_serial_multiplier
+    from repro.pim.multpim import build_multpim
+
+    s = build_serial_multiplier(32).program.stats()
+    rows = [("energy/serial_gates", 0.0, str(s.energy_gates))]
+    for model in ("unlimited", "standard", "minimal"):
+        p = build_multpim(32, model=model).program.stats()
+        rows.append((f"energy/{model}_gates", 0.0,
+                     f"{p.energy_gates} ({p.energy_gates / s.energy_gates:.2f}x"
+                     f" serial; paper 2.1x)"))
+    return rows
+
+
+def bounds() -> List[Row]:
+    from repro.core import PartitionConfig
+    from repro.core.bounds import (minimal_lower_bound, standard_lower_bound,
+                                   unlimited_lower_bound)
+
+    cfg = PartitionConfig(1024, 32)
+    return [
+        ("bounds/unlimited_lb_bits", 0.0,
+         f"{unlimited_lower_bound(cfg)} (paper: 443+; implemented 607)"),
+        ("bounds/standard_lb_bits", 0.0,
+         f"{standard_lower_bound(cfg)} (paper: 46; implemented 79)"),
+        ("bounds/minimal_lb_bits", 0.0,
+         f"{minimal_lower_bound(cfg)} (paper: 25; implemented 36)"),
+    ]
+
+
+def sim_throughput() -> List[Row]:
+    """Real wall-clock throughput of the crossbar simulator (jnp backend)."""
+    import jax
+    import numpy as np
+
+    from repro.pim import executor as ex
+    from repro.pim.multpim import build_multpim
+
+    pm = build_multpim(32, model="minimal")
+    mc = pm.program.to_microcode()
+    rows_per, crossbars = 1024, 8
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1 << 32, size=(crossbars, rows_per), dtype=np.uint64)
+    b = rng.integers(0, 1 << 32, size=(crossbars, rows_per), dtype=np.uint64)
+    state = ex.blank_state(crossbars, 1024, rows_per)
+    state = ex.write_numbers(state, pm.a_cols, a)
+    state = ex.write_numbers(state, pm.b_cols, b)
+    mc_dev = jax.numpy.asarray(mc)
+    out = ex.execute(jax.numpy.array(state), mc_dev)  # compile + warm
+    out.block_until_ready()
+    t0 = time.time()
+    reps = 3
+    for _ in range(reps):
+        out = ex.execute(jax.numpy.array(state), mc_dev)
+        out.block_until_ready()
+    dt = (time.time() - t0) / reps
+    mults = crossbars * rows_per
+    gate_evals = mc.shape[0] * mults
+    return [
+        ("sim/exec_32b_mult_8x1024rows", dt * 1e6,
+         f"{mults / dt:.0f} mults/s"),
+        ("sim/gate_throughput", dt * 1e6, f"{gate_evals / dt:.3g} gate-evals/s"),
+    ]
+
+
+def dot_accumulate() -> List[Row]:
+    """Beyond-paper: carry-save vs ripple accumulation in the PIM dot."""
+    from repro.pim.matmul import build_dot
+
+    rows: List[Row] = []
+    for acc in ("ripple", "carry_save"):
+        st = build_dot(8, 8, model="minimal", accumulate=acc).program.stats()
+        rows.append((f"dot8x8b/{acc}_cycles", 0.0, str(st.cycles)))
+    r = build_dot(8, 8, model="minimal", accumulate="ripple").program.stats()
+    c = build_dot(8, 8, model="minimal", accumulate="carry_save").program.stats()
+    rows.append(("dot8x8b/carry_save_speedup", 0.0,
+                 f"{r.cycles / c.cycles:.2f}x"))
+    return rows
+
+
+def pim_lm_gemm() -> List[Row]:
+    """PIM cost model over the assigned archs' core GEMM (one FFN layer)."""
+    import repro.configs as configs
+    from repro.pim.cost_model import gemm_cost
+
+    rows: List[Row] = []
+    for name in ("qwen1.5-0.5b", "gemma-7b", "arctic-480b", "xlstm-1.3b"):
+        cfg = configs.get(name)
+        ff = cfg.moe_d_ff if cfg.n_experts else cfg.d_ff
+        ff = ff or int(cfg.xlstm_proj_factor * cfg.d_model)
+        g_min = gemm_cost(4096, cfg.d_model, ff, n_bits=8, model="minimal")
+        g_base = gemm_cost(4096, cfg.d_model, ff, n_bits=8, model="baseline")
+        rows.append((f"pim_gemm/{name}", 0.0,
+                     f"minimal {g_min.time_s * 1e3:.2f}ms vs serial-PIM "
+                     f"{g_base.time_s * 1e3:.2f}ms "
+                     f"({g_base.time_s / g_min.time_s:.1f}x); control "
+                     f"{g_min.control_bits / 8e3:.0f}KB/GEMM"))
+    # 32-bit fixed point: the multiply dominates and the paper's full
+    # partition speedup carries through end-to-end
+    g32m = gemm_cost(1024, 512, 1024, n_bits=32, model="minimal")
+    g32b = gemm_cost(1024, 512, 1024, n_bits=32, model="baseline")
+    rows.append(("pim_gemm/32bit_fixed_point", 0.0,
+                 f"minimal {g32m.time_s * 1e3:.2f}ms vs serial-PIM "
+                 f"{g32b.time_s * 1e3:.2f}ms "
+                 f"({g32b.time_s / g32m.time_s:.1f}x)"))
+    return rows
+
+
+TABLES = [fig6a_latency, fig6b_control, fig6c_area, energy, bounds,
+          sim_throughput, dot_accumulate, pim_lm_gemm]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for table in TABLES:
+        for name, us, derived in table():
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: the paper's contribution in one minute.
+
+Builds the three partition designs, runs a bit-exact 32-bit multiplication
+on the simulated crossbar (1024 rows at once), and prints the Figure-6
+numbers — latency, control bits, area — next to the paper's claims.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import PartitionConfig, message_bits
+from repro.pim import executor as ex
+from repro.pim.mult_serial import build_serial_multiplier
+from repro.pim.multpim import build_multpim
+
+cfg = PartitionConfig(n=1024, k=32)
+print("== PartitionPIM quickstart ==")
+print(f"crossbar: {cfg.n} bitlines, {cfg.k} partitions "
+      f"({cfg.m} bitlines each)\n")
+
+# -- control messages (paper §2.3/§3.3/§4.3) -------------------------------
+for model in ("baseline", "unlimited", "standard", "minimal"):
+    print(f"{model:10s} control message: {message_bits(model, cfg):4d} bits")
+
+# -- build the multipliers ---------------------------------------------------
+serial = build_serial_multiplier(32)
+minimal = build_multpim(32, model="minimal")
+s_st, m_st = serial.program.stats(), minimal.program.stats()
+print(f"\n32-bit multiply latency: serial {s_st.cycles} cycles, "
+      f"minimal-partitions {m_st.cycles} cycles "
+      f"-> {s_st.cycles / m_st.cycles:.1f}x speedup (paper: ~9x)")
+
+# -- every cycle's control message round-trips through the real codec --------
+minimal.program.check_messages(sample_every=50)
+print("control codec: every sampled message encodes/decodes correctly")
+
+# -- run it: 1024 rows multiply concurrently --------------------------------
+rows = 1024
+rng = np.random.default_rng(0)
+a = rng.integers(0, 1 << 32, size=(1, rows), dtype=np.uint64)
+b = rng.integers(0, 1 << 32, size=(1, rows), dtype=np.uint64)
+state = ex.blank_state(1, cfg.n, rows)
+state = ex.write_numbers(state, minimal.a_cols, a)
+state = ex.write_numbers(state, minimal.b_cols, b)
+state = ex.execute(state, minimal.program.to_microcode())
+got = ex.read_numbers(state, minimal.result_cols, rows)
+ok = np.array_equal(got.astype(object), a.astype(object) * b.astype(object))
+print(f"simulated crossbar multiplied {rows} row-pairs bit-exactly: {ok}")

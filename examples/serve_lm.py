@@ -1,0 +1,24 @@
+"""Serving example: batched prefill + greedy decode on a small config.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch jamba-v0.1-52b]
+(any of the 10 registered architectures; --preset tiny keeps it CPU-sized)
+"""
+import argparse
+import sys
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="jamba-v0.1-52b")
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    sys.argv = ["serve", "--arch", args.arch, "--preset", "tiny",
+                "--batch", "4", "--prompt-len", "48",
+                "--gen", str(args.gen)]
+    serve_mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import (available_steps, latest_step,
+                                         restore_checkpoint, save_checkpoint)

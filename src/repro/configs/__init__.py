@@ -1,0 +1,33 @@
+"""Assigned-architecture registry: one module per config, ``get(name)`` API."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "granite-20b": "granite_20b",
+    "gemma-7b": "gemma_7b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "arctic-480b": "arctic_480b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "xlstm-1.3b": "xlstm_1_3b",
+}
+
+ARCH_NAMES: List[str] = list(_MODULES)
+
+
+def get(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_NAMES}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get(n) for n in ARCH_NAMES}

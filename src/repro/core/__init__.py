@@ -1,0 +1,41 @@
+"""PartitionPIM core: partition models, half-gate periphery, control codecs."""
+from repro.core.gates import GATE_CODES, GATE_DEFS, gate_by_code
+from repro.core.operation import (
+    GateOp,
+    InitOp,
+    LegalityError,
+    Operation,
+    PartitionConfig,
+    gate_interval,
+    op_intervals,
+    tight_selects,
+)
+from repro.core.models import MODELS, is_legal, validate
+from repro.core.control import decode, encode, message_bits
+from repro.core.program import Program, ProgramBuilder, ProgramStats
+from repro.core import bounds, periphery
+
+__all__ = [
+    "GATE_CODES",
+    "GATE_DEFS",
+    "gate_by_code",
+    "GateOp",
+    "InitOp",
+    "LegalityError",
+    "Operation",
+    "PartitionConfig",
+    "gate_interval",
+    "op_intervals",
+    "tight_selects",
+    "MODELS",
+    "is_legal",
+    "validate",
+    "decode",
+    "encode",
+    "message_bits",
+    "Program",
+    "ProgramBuilder",
+    "ProgramStats",
+    "bounds",
+    "periphery",
+]

@@ -1,0 +1,1 @@
+from repro.kernels.crossbar_exec.ops import crossbar_exec, crossbar_exec_ref, run_program

@@ -1,0 +1,24 @@
+"""Public entry point for the crossbar executor kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.crossbar_exec.crossbar_exec import crossbar_exec
+from repro.kernels.crossbar_exec.ref import crossbar_exec_ref
+
+__all__ = ["run_program", "crossbar_exec", "crossbar_exec_ref"]
+
+
+def run_program(state: jnp.ndarray, microcode, backend: str = "jnp",
+                w_tile: int = 128) -> jnp.ndarray:
+    """Execute a Program's microcode on crossbar state.
+
+    backend: "jnp" (lax.scan oracle) or "pallas" (interpret-mode TPU kernel
+    on CPU; compiled VMEM-tiled kernel on real TPU).
+    """
+    mc = jnp.asarray(microcode, jnp.int32)
+    if backend == "jnp":
+        return crossbar_exec_ref(state, mc)
+    if backend == "pallas":
+        return crossbar_exec(state, mc, w_tile=w_tile)
+    raise ValueError(f"unknown backend {backend!r}")

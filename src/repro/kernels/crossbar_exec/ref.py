@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the crossbar microcode executor kernel.
+
+Delegates to ``repro.pim.executor.execute`` (the lax.scan implementation) —
+the same function the system uses as its jnp backend, so kernel == backend
+== simulator semantics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.pim.executor import execute as _execute
+
+
+def crossbar_exec_ref(state: jnp.ndarray, microcode: jnp.ndarray) -> jnp.ndarray:
+    """state: (C, n, W) uint32; microcode: (G, 4) int32 -> (C, n, W)."""
+    return _execute(jnp.array(state), jnp.asarray(microcode, jnp.int32))

@@ -1,0 +1,36 @@
+"""Quantized linear op: symmetric per-channel int8, PIM-faithful rounding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.quant_matmul import quant_matmul_int
+from repro.kernels.quant_matmul.ref import quant_matmul_int_ref, quant_matmul_ref
+
+__all__ = ["quantize_sym", "quant_linear", "quant_matmul_int",
+           "quant_matmul_ref", "quant_matmul_int_ref"]
+
+
+def quantize_sym(x: jnp.ndarray, axis: int, bits: int = 8):
+    """Symmetric per-channel quantization -> (int8 values, f32 scales)."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return q, jnp.squeeze(scale, axis=axis).astype(jnp.float32)
+
+
+def quant_linear(x: jnp.ndarray, w: jnp.ndarray, bits: int = 8,
+                 backend: str = "pallas") -> jnp.ndarray:
+    """y = x @ w via int8 fixed point. x: (..., K) f32/bf16, w: (K, N)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    xq, xs = quantize_sym(x2, axis=1, bits=bits)
+    wq, ws = quantize_sym(w.astype(jnp.float32), axis=0, bits=bits)
+    if backend == "pallas":
+        acc = quant_matmul_int(xq, wq)
+    else:
+        acc = quant_matmul_int_ref(xq, wq)
+    y = acc.astype(jnp.float32) * xs[:, None] * ws[None, :]
+    return y.reshape(*lead, w.shape[1]).astype(x.dtype)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fixed-point (int8) matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
+                     x_scale: jnp.ndarray, w_scale: jnp.ndarray) -> jnp.ndarray:
+    """x: (M, K) int8, w: (K, N) int8, scales per row/col -> (M, N) f32."""
+    acc = jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32))
+    return acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]
+
+
+def quant_matmul_int_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Exact int32 accumulation oracle."""
+    return jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32))

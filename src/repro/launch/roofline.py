@@ -1,0 +1,193 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) single-pod cell:
+    compute term    = HLO_FLOPs_per_dev / 197 TFLOP/s     (bf16 MXU peak)
+    memory term     = HLO_bytes_per_dev / 819 GB/s        (HBM bandwidth)
+    collective term = wire_bytes_per_dev / 50 GB/s        (ICI link)
+plus MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (inference) and the
+HLO/MODEL ratio (catches remat/attention/dispatch overhead).  HLO FLOPs come
+from the *unrolled* lowering (XLA cost analysis counts loop bodies once);
+SSM/xLSTM sequence-recurrence FLOPs (inside lax.scan, analytically small)
+are added as a correction term.
+
+Usage:  PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import repro.configs as configs
+from repro.models import model_lib as M
+from repro.models.config import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def _expert_params(cfg) -> int:
+    if not cfg.n_experts:
+        return 0
+    f = cfg.moe_d_ff or cfg.d_ff
+    n_moe_layers = sum(1 for k in cfg.pattern if k in ("ae", "ar", "me")
+                       ) * cfg.n_super
+    return n_moe_layers * cfg.n_experts * 3 * cfg.d_model * f
+
+
+def _embed_params(cfg) -> int:
+    mult = 1 if cfg.tie_embeddings else 2
+    return mult * cfg.padded_vocab * cfg.d_model
+
+
+def active_params(cfg) -> int:
+    total = M.param_count(cfg)
+    ep = _expert_params(cfg)
+    active_ep = ep * cfg.top_k / max(cfg.n_experts, 1)
+    return int(total - _embed_params(cfg) - ep + active_ep)
+
+
+def recurrence_flops(cfg, tokens: int) -> float:
+    """Analytic per-token recurrence FLOPs hidden inside lax.scan bodies."""
+    fl = 0.0
+    per = cfg.n_super
+    for kind in cfg.pattern:
+        if kind in ("md", "me"):
+            fl += per * 6 * cfg.d_inner * cfg.mamba_d_state
+        if kind == "xm":
+            p = int(cfg.xlstm_proj_factor * cfg.d_model)
+            dh = p // cfg.n_heads
+            fl += per * 8 * cfg.n_heads * dh * dh
+        if kind == "xs":
+            p = int(cfg.xlstm_proj_factor * cfg.d_model)
+            fl += per * 10 * p
+    return fl * tokens
+
+
+def model_flops(cfg, shape) -> float:
+    n_act = active_params(cfg)
+    d_tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        base = 6.0 * n_act * d_tokens
+        base += 3 * recurrence_flops(cfg, d_tokens)
+    elif shape.kind == "prefill":
+        base = 2.0 * n_act * d_tokens
+        base += recurrence_flops(cfg, d_tokens)
+    else:  # decode: one token per sequence
+        base = 2.0 * n_act * shape.global_batch
+        base += recurrence_flops(cfg, shape.global_batch)
+    return base
+
+
+def _advice(dominant: str, cell: Dict) -> str:
+    colls = cell.get("collectives", {})
+    if dominant == "collective":
+        big = max(colls.items(), key=lambda kv: kv[1]["wire_bytes"])[0] \
+            if colls else "?"
+        return f"cut {big} volume (sharding/dtype of the reduced tensor)"
+    if dominant == "memory":
+        return "raise arithmetic intensity: fuse/quantize, larger per-chip tile"
+    return "compute-bound: reduce remat recompute or use int8 MXU path"
+
+
+def analyze(dir_: str) -> List[Dict]:
+    out = []
+    for arch in configs.ARCH_NAMES:
+        cfg = configs.get(arch)
+        for shape in SHAPES:
+            path = os.path.join(
+                dir_, f"{arch}__{shape.name}__single.json")
+            if not os.path.exists(path):
+                continue
+            cell = json.load(open(path))
+            row: Dict = {"arch": arch, "shape": shape.name,
+                         "status": cell.get("status")}
+            if cell.get("status") != "ok" or "flops_per_dev" not in cell:
+                row["reason"] = cell.get("reason", cell.get("error", ""))[:60]
+                out.append(row)
+                continue
+            n_dev = cell["n_devices"]
+            mf = model_flops(cfg, shape)
+            hlo_flops_global = cell["flops_per_dev"] * n_dev
+            # memory: HLO bytes-accessed is an upper bound (CPU-backend
+            # fusion is weaker than TPU's); resident argument bytes per step
+            # (params + caches, which a step must read once) is the lower
+            # bound — decode steps sit at the lower bound on real hardware.
+            mem_lb = cell["mem"]["argument_bytes"] / HBM_BW
+            terms = {
+                "compute": cell["flops_per_dev"] / PEAK_FLOPS,
+                "memory": cell["bytes_per_dev"] / HBM_BW,
+                "collective": cell["wire_bytes_per_dev"] / LINK_BW,
+            }
+            dominant = max(terms, key=terms.get)
+            row.update(
+                compute_s=terms["compute"],
+                memory_s=terms["memory"],
+                memory_lb_s=mem_lb,
+                collective_s=terms["collective"],
+                dominant=dominant,
+                model_flops=mf,
+                hlo_over_model=hlo_flops_global / max(mf, 1.0),
+                compute_fraction=terms["compute"] / terms[dominant],
+                temp_gb=cell["mem"]["temp_bytes"] / 1e9,
+                advice=_advice(dominant, cell),
+            )
+            out.append(row)
+    return out
+
+
+def render(rows: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | compute (s) | memory ub (s) | memory lb (s) | "
+        "collective (s) | dominant | MODEL_FLOPS | HLO/MODEL | compute-frac "
+        "| temp GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") != "ok" or "dominant" not in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                f"{r.get('status')}: {r.get('reason', '')} | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['memory_lb_s']:.3e} | "
+            f"{r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['model_flops']:.3g} | "
+            f"{r['hlo_over_model']:.2f} | {r['compute_fraction']:.2f} | "
+            f"{r['temp_gb']:.1f} |")
+    ok = [r for r in rows if "dominant" in r]
+    if ok:
+        worst = min(ok, key=lambda r: r["compute_fraction"])
+        coll = max(ok, key=lambda r: r["collective_s"])
+        lines.append("")
+        lines.append(f"* worst compute fraction: {worst['arch']} x "
+                     f"{worst['shape']} ({worst['compute_fraction']:.2f}, "
+                     f"dominant {worst['dominant']})")
+        lines.append(f"* most collective-bound: {coll['arch']} x "
+                     f"{coll['shape']} ({coll['collective_s']:.3e}s on wire)")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=RESULTS_DIR)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = analyze(args.dir)
+    md = render(rows)
+    print(md)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md + "\n")
+
+
+if __name__ == "__main__":
+    main()

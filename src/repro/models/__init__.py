@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, SHAPES, ShapeSpec
+from repro.models import model as model_lib

@@ -1,0 +1,163 @@
+"""Attention: GQA/MQA, sliding windows, cross-attention, KV-cache decode.
+
+Training/prefill use a pure-jnp flash implementation (two-level ``lax.scan``
+over query/key blocks with an online softmax): memory is O(Bq*Bk) per step
+instead of O(S^2), which is what lets the 32k-prefill cells fit the dry-run
+memory budget; XLA counts the same FLOPs as monolithic attention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import context as dctx
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def direct_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                     q_offset: int = 0) -> jnp.ndarray:
+    """Materialized-scores attention (exact HLO flop accounting; used by the
+    dry-run cost lowering — memory comes from the flash lowering)."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                    q_offset: int = 0, block_q: int = 512,
+                    block_k: int = 512) -> jnp.ndarray:
+    """q: (B, Sq, H, D), k/v: (B, Sk, Hkv, D) -> (B, Sq, H, D).
+
+    ``q_offset``: absolute position of q[0] (for prefill continuation).
+    ``window``: sliding-window radius (attend to keys in (pos-window, pos]).
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    n_rep = h // hkv
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sq_p, sk_p = q.shape[1], k.shape[1]
+    nq, nk = sq_p // block_q, sk_p // block_k
+
+    # (nq, B, H, Bq, D) etc — scan over leading axis; batch on DP, heads on TP
+    dp = dctx.dp_axes()
+    qb = q.reshape(b, nq, block_q, h, d).transpose(1, 0, 3, 2, 4)
+    kb = k.reshape(b, nk, block_k, h, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, block_k, h, d).transpose(1, 0, 3, 2, 4)
+    tp = dctx.tp_axis()
+    qb = dctx.shard(qb, None, dp, tp, None, None)
+    kb = dctx.shard(kb, None, dp, tp, None, None)
+    vb = dctx.shard(vb, None, dp, tp, None, None)
+    scale = 1.0 / math.sqrt(d)
+
+    q_pos_base = jnp.arange(block_q)
+    k_pos_base = jnp.arange(block_k)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def q_step(_, qi_q):
+        qi, qblk = qi_q
+        q_pos = q_offset + qi * block_q + q_pos_base  # (Bq,)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def k_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            k_pos = ki * block_k + k_pos_base
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            mask &= (k_pos < sk)[None, :]  # kv padding
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        a0 = jnp.zeros((b, h, block_q, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, ob = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = ob.transpose(1, 0, 3, 2, 4).reshape(b, sq_p, h, d)
+    return out[:, :sq]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """Single-step attention: q (B, 1, H, D) over cache (B, S, Hkv, D)."""
+    b, _, h, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    n_rep = h // hkv
+    qg = q.reshape(b, 1, hkv, n_rep, d)
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(d)
+    pos = jnp.arange(s)
+    mask = pos[None, :] < cache_len  # (B?, S) — cache_len scalar or (B,)
+    if window is not None:
+        mask = mask & (pos[None, :] > cache_len - 1 - window)
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def cross_attention(q, k, v) -> jnp.ndarray:
+    """Full (non-causal) attention onto a small memory (patches / frames)."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

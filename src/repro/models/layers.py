@@ -1,0 +1,163 @@
+"""Primitive layers: norms, rotary embeddings, activations, linears, embed.
+
+Parameters are plain nested dicts of jnp arrays.  Every layer has a
+``*_specs`` companion producing ShapeDtypeStructs so the full-size configs
+can be lowered without allocating (the dry-run path), and ``init_*``
+initializers used by the smoke tests / real training.
+
+``PIMLinear`` is the paper integration point: mode "xla" is a plain matmul,
+"quant" routes through the int8 Pallas kernel (fixed-point arithmetic, the
+TPU analogue of the crossbar's integer representation), and "pim_sim"
+executes the actual MultPIM gate programs on the bit-accurate simulator
+(tiny shapes; used in examples/tests).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# spec / init plumbing
+# --------------------------------------------------------------------------
+
+class Spec(jax.ShapeDtypeStruct):
+    """ShapeDtypeStruct + init kind ('normal', 'zeros', 'ones', 'scaled')."""
+
+    def __init__(self, shape, dtype, init: str = "normal", scale: float = 1.0):
+        super().__init__(shape, dtype)
+        self.init = init
+        self.scale = scale
+
+
+def materialize(specs, key) -> Params:
+    """Instantiate a spec tree into real parameters."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        init = getattr(s, "init", "normal")
+        scale = getattr(s, "scale", 1.0)
+        if init == "zeros":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif init == "ones":
+            out.append(jnp.ones(s.shape, s.dtype))
+        elif init == "alog":
+            # S4/Mamba A initialization: A = -(1..d_state) per channel
+            ds = s.shape[-1]
+            a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                 s.shape)
+            out.append(jnp.log(a).astype(s.dtype))
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            std = scale / math.sqrt(max(1, fan_in))
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * std
+                        ).astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def as_shapes(specs):
+    """Strip init metadata -> plain ShapeDtypeStructs (for jit.lower)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# --------------------------------------------------------------------------
+# norms / activations / rope
+# --------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float):
+    # statistics in f32; the (big) elementwise multiply stays in x.dtype so a
+    # pending TP all-reduce on x is materialized in bf16, not pushed past an
+    # f32 upcast (halves the collective wire bytes — see EXPERIMENTS §Perf)
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return x * (scale.astype(x.dtype) * weight.astype(x.dtype))
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, Dh), positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]  # (B, S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# linear / embedding (with PIM modes)
+# --------------------------------------------------------------------------
+
+PIM_MODE: Dict[str, str] = {"mode": "xla"}  # process-wide switch for examples
+
+
+def linear(x, w, b=None):
+    mode = PIM_MODE["mode"]
+    if mode == "quant":
+        from repro.kernels.quant_matmul import quant_linear
+
+        y = quant_linear(x, w.astype(jnp.float32))
+    elif mode == "pim_sim":
+        y = _pim_sim_linear(x, w)
+    else:
+        y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def _pim_sim_linear(x, w, bits: int = 7):
+    """Bit-exact crossbar execution of the matmul (tiny shapes only).
+
+    7-bit symmetric quantization so the offset-shifted unsigned operands fit
+    the 8-bit (power-of-two partition count) MultPIM multiplier.
+    """
+    from repro.pim.matmul import pim_matmul_int
+
+    xf = np.asarray(jax.device_get(x), np.float32)
+    wf = np.asarray(jax.device_get(w), np.float32)
+    lead = xf.shape[:-1]
+    xf = xf.reshape(-1, xf.shape[-1])
+    qmax = 2 ** (bits - 1) - 1
+    xs = np.maximum(np.abs(xf).max(axis=1, keepdims=True), 1e-8) / qmax
+    ws = np.maximum(np.abs(wf).max(axis=0, keepdims=True), 1e-8) / qmax
+    xq = np.clip(np.round(xf / xs), -qmax, qmax).astype(np.int64)
+    wq = np.clip(np.round(wf / ws), -qmax, qmax).astype(np.int64)
+    # crossbars store magnitudes; signs handled by 2's-complement offset:
+    # shift into unsigned, multiply, correct. (offset trick: (a+128)(b+128))
+    off = qmax + 1
+    acc = pim_matmul_int((xq + off).astype(np.uint64), (wq.T + off).astype(np.uint64),
+                         n_bits=bits + 1, model="minimal")
+    acc = acc.astype(np.int64)
+    corr = (off * (wq.sum(axis=0, keepdims=True) + off * xq.shape[1])
+            + off * xq.sum(axis=1, keepdims=True))
+    y = (acc - corr) * (xs * ws)
+    return jnp.asarray(y.reshape(*lead, wf.shape[1]), x.dtype)
+
+
+def embed_lookup(table, ids):
+    return jnp.take(table, ids, axis=0)
+
+
+def unembed(x, table, chunk: Optional[int] = None):
+    """Logits = x @ table.T (table: (V, d))."""
+    return jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))

@@ -1,0 +1,576 @@
+"""Model assembly: parameter specs, train forward, prefill, decode.
+
+The layer stack is ``lax.scan`` over super-blocks (stacked params) so HLO
+size is O(|pattern|), not O(n_layers) — this is what keeps the 480B-config
+dry-run compiles tractable.  Each block kind returns ``(x, cache_out)``;
+caches are scanned alongside (prefill emits them, decode threads them).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import context as dctx
+from repro.models import attention as attn
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.models.layers import (Spec, activation, apply_rope, embed_lookup,
+                                 linear, materialize, rms_norm, unembed)
+from repro.models.moe import moe_ffn
+from repro.models.ssm import mamba_mixer
+from repro.models.xlstm import mlstm_block, slstm_block
+
+Params = Dict[str, Any]
+
+
+# ==========================================================================
+# parameter specs
+# ==========================================================================
+
+def _attn_specs(cfg: ModelConfig, dt) -> Dict[str, Spec]:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {
+        "norm1": Spec((d,), jnp.float32, "ones"),
+        "wq": Spec((d, h * hd), dt),
+        "wk": Spec((d, hkv * hd), dt),
+        "wv": Spec((d, hkv * hd), dt),
+        "wo": Spec((h * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        s.update(bq=Spec((h * hd,), jnp.float32, "zeros"),
+                 bk=Spec((hkv * hd,), jnp.float32, "zeros"),
+                 bv=Spec((hkv * hd,), jnp.float32, "zeros"))
+    return s
+
+
+def _mlp_specs(cfg: ModelConfig, dt) -> Dict[str, Spec]:
+    d, ff = cfg.d_model, cfg.d_ff
+    s = {
+        "norm2": Spec((d,), jnp.float32, "ones"),
+        "w_in": Spec((d, ff), dt),
+        "w_out": Spec((ff, d), dt),
+    }
+    if cfg.gated_mlp:
+        s["w_gate"] = Spec((d, ff), dt)
+    return s
+
+
+def _moe_specs(cfg: ModelConfig, dt) -> Dict[str, Spec]:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    return {
+        "norm_moe": Spec((d,), jnp.float32, "ones"),
+        "router": Spec((d, e), jnp.float32),
+        "w1": Spec((e, d, f), dt),
+        "w2": Spec((e, f, d), dt),
+        "w3": Spec((e, d, f), dt),
+    }
+
+
+def _xattn_specs(cfg: ModelConfig, dt) -> Dict[str, Spec]:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "normx": Spec((d,), jnp.float32, "ones"),
+        "xwq": Spec((d, h * hd), dt),
+        "xwk": Spec((d, hkv * hd), dt),
+        "xwv": Spec((d, hkv * hd), dt),
+        "xwo": Spec((h * hd, d), dt),
+    }
+
+
+def _mamba_specs(cfg: ModelConfig, dt) -> Dict[str, Spec]:
+    d, di, ds, dc, dtr = (cfg.d_model, cfg.d_inner, cfg.mamba_d_state,
+                          cfg.mamba_d_conv, cfg.dt_rank)
+    return {
+        "norm_m": Spec((d,), jnp.float32, "ones"),
+        "in_proj": Spec((d, 2 * di), dt),
+        "conv_w": Spec((dc, di), jnp.float32, "normal", 0.5),
+        "conv_b": Spec((di,), jnp.float32, "zeros"),
+        "x_proj": Spec((di, dtr + 2 * ds), dt),
+        "dt_proj": Spec((dtr, di), jnp.float32, "normal", 0.5),
+        "dt_bias": Spec((di,), jnp.float32, "zeros"),
+        "a_log": Spec((di, ds), jnp.float32, "alog"),
+        "d_skip": Spec((di,), jnp.float32, "ones"),
+        "out_proj": Spec((di, d), dt),
+    }
+
+
+def _mlstm_specs(cfg: ModelConfig, dt) -> Dict[str, Spec]:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    p = int(cfg.xlstm_proj_factor * d)
+    p -= p % nh
+    dh = p // nh
+    return {
+        "norm_x": Spec((d,), jnp.float32, "ones"),
+        "up_proj": Spec((d, 2 * p), dt),
+        # block-diagonal per-head projections (as in the xLSTM reference)
+        "wq": Spec((nh, dh, dh), dt),
+        "wk": Spec((nh, dh, dh), dt),
+        "wv": Spec((nh, dh, dh), dt),
+        "w_gates": Spec((p, 2 * nh), jnp.float32, "normal", 0.5),
+        "down_proj": Spec((p, d), dt),
+    }
+
+
+def _slstm_specs(cfg: ModelConfig, dt) -> Dict[str, Spec]:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    p = int(cfg.xlstm_proj_factor * d)
+    p -= p % nh
+    dh = p // nh
+    return {
+        "norm_x": Spec((d,), jnp.float32, "ones"),
+        "up_proj": Spec((d, 2 * p), dt),
+        "wz": Spec((nh, dh, dh), dt),
+        "w_gates": Spec((p, 3 * nh), jnp.float32, "normal", 0.5),
+        "down_proj": Spec((p, d), dt),
+    }
+
+
+def _block_specs(kind: str, cfg: ModelConfig, dt) -> Dict[str, Spec]:
+    s: Dict[str, Spec] = {}
+    if kind in ("ad", "ae", "ar", "adx", "enc"):
+        s.update(_attn_specs(cfg, dt))
+    if kind in ("ad", "adx", "enc", "md", "ar"):
+        s.update(_mlp_specs(cfg, dt))
+    if kind in ("ae", "ar", "me"):
+        s.update(_moe_specs(cfg, dt))
+    if kind == "adx":
+        s.update(_xattn_specs(cfg, dt))
+    if kind in ("md", "me"):
+        s.update(_mamba_specs(cfg, dt))
+    if kind == "xm":
+        s.update(_mlstm_specs(cfg, dt))
+    if kind == "xs":
+        s.update(_slstm_specs(cfg, dt))
+    return s
+
+
+def _stack_specs(specs: Dict[str, Spec], n: int) -> Dict[str, Spec]:
+    return {k: Spec((n,) + v.shape, v.dtype, getattr(v, "init", "normal"),
+                    getattr(v, "scale", 1.0)) for k, v in specs.items()}
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    dt = cfg.compute_dtype
+    v = cfg.padded_vocab
+    d = cfg.d_model
+    out: Params = {
+        "embed": Spec((v, d), dt, "normal"),
+        "final_norm": Spec((d,), jnp.float32, "ones"),
+        "blocks": {
+            str(i): _stack_specs(_block_specs(kind, cfg, dt), cfg.n_super)
+            for i, kind in enumerate(cfg.pattern)
+        },
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = Spec((v, d), dt)
+    if cfg.is_encoder_decoder:
+        out["encoder"] = {
+            "blocks": {"0": _stack_specs(_block_specs("enc", cfg, dt),
+                                         cfg.n_encoder_layers)},
+            "enc_norm": Spec((d,), jnp.float32, "ones"),
+        }
+    if cfg.vision_dim:
+        out["vision_proj"] = Spec((cfg.vision_dim, d), dt)
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    return materialize(param_specs(cfg), key)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import numpy as np
+
+    leaves = jax.tree.leaves(
+        param_specs(cfg), is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return int(sum(np.prod(l.shape) for l in leaves))
+
+
+# ==========================================================================
+# block application
+# ==========================================================================
+
+def _quantize_kv(x):
+    """(B, S, H, D) -> (int8 values, f32 per-(B,S,H) scales)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
+                    causal=True):
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    quant = cfg.kv_cache_dtype == "int8"
+    hh = rms_norm(x, p["norm1"], cfg.norm_eps)
+    q = linear(hh, p["wq"], p.get("bq")).reshape(b, s, h, hd)
+    k = linear(hh, p["wk"], p.get("bk")).reshape(b, s, hkv, hd)
+    v = linear(hh, p["wv"], p.get("bv")).reshape(b, s, hkv, hd)
+    if causal:  # rope only on the causal (decoder) stacks
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if mode == "decode":
+        cap = cache["k"].shape[1]
+        idx = pos % cap
+        if quant:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            kc = jax.lax.dynamic_update_slice(cache["k"], kq, (0, idx, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], vq, (0, idx, 0, 0))
+            ksc = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                               (0, idx, 0))
+            vsc = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                               (0, idx, 0))
+            k_full = _dequantize_kv(kc, ksc, cfg.compute_dtype)
+            v_full = _dequantize_kv(vc, vsc, cfg.compute_dtype)
+            new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            k_full, v_full = kc, vc
+            new_cache = {"k": kc, "v": vc}
+        cache_len = jnp.minimum(pos + 1, cap)
+        out = attn.decode_attention(q, k_full, v_full, cache_len)
+    else:
+        window = cfg.sliding_window if causal else None
+        attn_fn = attn.flash_attention if cfg.flash_attention \
+            else attn.direct_attention
+        out = attn_fn(q, k, v, causal=causal, window=window)
+        if mode == "prefill":
+            if cfg.sliding_window:
+                cap = min(s, cfg.sliding_window)
+                # ring alignment: decode writes position p at index p % cap,
+                # so position (s-cap+r) must sit at index (s-cap+r) % cap.
+                shift = (s - cap) % cap if cap else 0
+                kc = jnp.roll(k[:, -cap:], shift, axis=1) if shift \
+                    else k[:, -cap:]
+                vc = jnp.roll(v[:, -cap:], shift, axis=1) if shift \
+                    else v[:, -cap:]
+            else:
+                # full cache with decode headroom up to max_seq_len
+                cap = max(s, cfg.max_seq_len)
+                pad = ((0, 0), (0, cap - s), (0, 0), (0, 0))
+                kc = jnp.pad(k, pad) if cap > s else k
+                vc = jnp.pad(v, pad) if cap > s else v
+            if quant:
+                kq, ks = _quantize_kv(kc)
+                vq, vs = _quantize_kv(vc)
+                new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                new_cache = {"k": kc.astype(cfg.compute_dtype),
+                             "v": vc.astype(cfg.compute_dtype)}
+    y = linear(out.reshape(b, s, h * hd), p["wo"])
+    return x + y, new_cache
+
+
+def _cross_attention(x, p, cfg: ModelConfig, memory, mode, cache):
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    hh = rms_norm(x, p["normx"], cfg.norm_eps)
+    q = linear(hh, p["xwq"]).reshape(b, s, h, hd)
+    if mode == "decode":
+        k, v = cache["xk"], cache["xv"]
+        new_cache = cache
+    else:
+        sk = memory.shape[1]
+        k = linear(memory, p["xwk"]).reshape(b, sk, hkv, hd)
+        v = linear(memory, p["xwv"]).reshape(b, sk, hkv, hd)
+        new_cache = ({"xk": k.astype(cfg.compute_dtype),
+                      "xv": v.astype(cfg.compute_dtype)}
+                     if mode == "prefill" else None)
+    out = attn.cross_attention(q, k, v)
+    y = linear(out.reshape(b, s, h * hd), p["xwo"])
+    return x + y, new_cache
+
+
+def _dense_ffn(hh, p, cfg: ModelConfig):
+    act = activation(cfg.activation)
+    h = act(linear(hh, p["w_in"]))
+    if cfg.gated_mlp:
+        h = h * linear(hh, p["w_gate"])
+    return linear(h, p["w_out"])
+
+
+def _mlp(x, p, cfg: ModelConfig):
+    hh = rms_norm(x, p["norm2"], cfg.norm_eps)
+    return x + _dense_ffn(hh, p, cfg)
+
+
+def _moe(x, p, cfg: ModelConfig, dense_residual: bool):
+    hh = rms_norm(x, p["norm_moe"], cfg.norm_eps)
+    y = moe_ffn(hh, p, cfg)
+    if dense_residual:  # arctic: parallel dense MLP on the same input
+        y = y + _dense_ffn(hh, p, cfg)
+    return x + y
+
+
+def _mamba(x, p, cfg: ModelConfig, mode, cache):
+    hh = rms_norm(x, p["norm_m"], cfg.norm_eps)
+    state = (cache["ssm"], cache["conv"]) if mode == "decode" else None
+    y, (ssm, conv) = mamba_mixer(hh, p, cfg, state)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"ssm": ssm.astype(jnp.float32),
+                     "conv": conv.astype(cfg.compute_dtype)}
+    return x + y, new_cache
+
+
+def _xlstm(x, p, cfg: ModelConfig, mode, cache, kind):
+    hh = rms_norm(x, p["norm_x"], cfg.norm_eps)
+    fn = mlstm_block if kind == "xm" else slstm_block
+    state = ((cache["c"], cache["n"], cache["m"]) if mode == "decode" else None)
+    y, (c, n, m) = fn(hh, p, cfg, state)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"c": c.astype(jnp.float32), "n": n.astype(jnp.float32),
+                     "m": m.astype(jnp.float32)}
+    return x + y, new_cache
+
+
+def apply_block(kind: str, x, p, cfg: ModelConfig, *, positions, mode,
+                cache=None, pos=None, memory=None):
+    """Returns (x, cache_out or None)."""
+    out_cache = {}
+    if kind in ("ad", "ae", "ar", "adx", "enc"):
+        x, c = _self_attention(x, p, cfg, positions, mode, cache, pos,
+                               causal=(kind != "enc"))
+        if c:
+            out_cache.update(c)
+    if kind == "adx":
+        x, c = _cross_attention(x, p, cfg, memory, mode, cache)
+        if c:
+            out_cache.update({k2: v for k2, v in c.items()
+                              if k2 in ("xk", "xv")})
+    if kind in ("md", "me"):
+        x, c = _mamba(x, p, cfg, mode, cache)
+        if c:
+            out_cache.update(c)
+    if kind in ("xm", "xs"):
+        x, c = _xlstm(x, p, cfg, mode, cache, kind)
+        if c:
+            out_cache.update(c)
+    if kind in ("ad", "adx", "enc", "md"):
+        x = _mlp(x, p, cfg)
+    if kind == "ae":
+        x = _moe(x, p, cfg, dense_residual=False)
+    if kind == "ar":
+        x = _moe(x, p, cfg, dense_residual=True)
+    if kind == "me":
+        x = _moe(x, p, cfg, dense_residual=False)
+    x = dctx.shard(x, dctx.dp_axes(), None, None)  # pin residual stream to DP
+    return x, (out_cache or None)
+
+
+# ==========================================================================
+# stacks
+# ==========================================================================
+
+def _decoder_stack(params, x, cfg: ModelConfig, *, positions, mode,
+                   caches=None, pos=None, memory=None):
+    """Scan over super-blocks. caches: dict pos->stacked cache (or None)."""
+
+    def body(xc, layer_inputs):
+        x = xc
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            pslice = layer_inputs[0][str(i)]
+            cslice = layer_inputs[1].get(str(i)) if layer_inputs[1] else None
+            x, c = apply_block(kind, x, pslice, cfg, positions=positions,
+                               mode=mode, cache=cslice, pos=pos, memory=memory)
+            if c is not None:
+                new_caches[str(i)] = c
+        return x, (new_caches or None)
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = (params["blocks"], caches if caches is not None
+          else {str(i): None for i in range(len(cfg.pattern))})
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, xs)
+        return x, new_caches
+    # unrolled (dry-run mode: XLA cost analysis counts while-loop bodies once,
+    # so roofline cells lower with the stack unrolled)
+    per_super = []
+    for i in range(cfg.n_super):
+        sl = jax.tree.map(lambda a: a[i], xs)
+        x, c = body(x, sl)
+        per_super.append(c)
+    if any(c is not None for c in per_super):
+        new_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *per_super)
+    else:
+        new_caches = None
+    return x, new_caches
+
+
+def _encode(params, frames, cfg: ModelConfig):
+    x = frames.astype(cfg.compute_dtype)
+
+    def body(xc, pslice):
+        x, _ = apply_block("enc", xc, pslice["0"], cfg,
+                           positions=jnp.arange(xc.shape[1]), mode="train")
+        return x, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    else:
+        for i in range(cfg.n_encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i],
+                                        params["encoder"]["blocks"]))
+    return rms_norm(x, params["encoder"]["enc_norm"], cfg.norm_eps)
+
+
+def _memory(params, batch, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return _encode(params, batch["frames"], cfg)
+    if cfg.vision_dim:
+        return batch["patches"].astype(cfg.compute_dtype) @ params[
+            "vision_proj"].astype(cfg.compute_dtype)
+    return None
+
+
+# ==========================================================================
+# entry points: loss / prefill / decode
+# ==========================================================================
+
+def _embed_in(params, tokens, cfg: ModelConfig):
+    x = embed_lookup(params["embed"], tokens).astype(cfg.compute_dtype)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return dctx.shard_batch_dim(x)
+
+
+def _unembed_table(params, cfg):
+    return params.get("lm_head", params["embed"])
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Mean next-token cross entropy (chunked over tokens)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    x = _embed_in(params, tokens, cfg)
+    memory = _memory(params, batch, cfg)
+    positions = jnp.arange(tokens.shape[1])
+    x, _ = _decoder_stack(params, x, cfg, positions=positions, mode="train",
+                          memory=memory)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = _unembed_table(params, cfg)
+
+    flat_x = x.reshape(-1, cfg.d_model)
+    flat_y = labels.reshape(-1)
+    n_tok = flat_x.shape[0]
+    chunk = cfg.loss_chunk if n_tok % cfg.loss_chunk == 0 else n_tok
+
+    dp = dctx.dp_axes()
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)  # don't keep logits
+    def chunk_nll(args):
+        xc, yc = args
+        xc = dctx.shard(xc, dp, None)
+        logits = unembed(xc, table).astype(jnp.float32)
+        logits = dctx.shard(logits, dp, dctx.tp_axis())  # tokens x vocab
+        m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[:, 0]
+        # gold logit via mask-sum: fuses elementwise over the vocab shard
+        # (take_along_axis would gather across the "model"-sharded axis)
+        idx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        gold = jnp.sum(jnp.where(idx == yc[:, None], logits, 0.0), axis=-1)
+        return jnp.sum(lse - gold)
+
+    xs = (flat_x.reshape(-1, chunk, cfg.d_model), flat_y.reshape(-1, chunk))
+    if cfg.scan_layers:
+        nll = jax.lax.map(chunk_nll, xs)
+    else:
+        n_chunks = n_tok // chunk
+        nll = jnp.stack([chunk_nll(jax.tree.map(lambda a: a[i], xs))
+                         for i in range(n_chunks)])
+    return nll.sum() / n_tok
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Forward the prompt; return (last-token logits, caches)."""
+    tokens = batch["tokens"]
+    x = _embed_in(params, tokens, cfg)
+    memory = _memory(params, batch, cfg)
+    positions = jnp.arange(tokens.shape[1])
+    x, caches = _decoder_stack(params, x, cfg, positions=positions,
+                               mode="prefill", memory=memory)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x[:, -1], _unembed_table(params, cfg))
+    return logits.astype(jnp.float32), caches
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig):
+    """One greedy decode step. token: (B, 1) int32; pos: scalar int32."""
+    x = _embed_in(params, token, cfg)
+    positions = jnp.full((1,), pos, jnp.int32)
+    x, new_caches = _decoder_stack(params, x, cfg, positions=positions,
+                                   mode="decode", caches=caches, pos=pos)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x[:, -1], _unembed_table(params, cfg)).astype(jnp.float32)
+    next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return next_tok, logits, new_caches
+
+
+# ==========================================================================
+# cache specs (for the dry-run)
+# ==========================================================================
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
+    """ShapeDtypeStructs of the decode caches for a given shape cell."""
+    dt = cfg.compute_dtype
+    ns = cfg.n_super
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    out: Dict[str, Any] = {}
+    for i, kind in enumerate(cfg.pattern):
+        c: Dict[str, Any] = {}
+        if kind in ("ad", "ae", "ar", "adx"):
+            cap = min(seq_len, cfg.sliding_window) if cfg.sliding_window \
+                else seq_len
+            kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dt
+            c["k"] = jax.ShapeDtypeStruct((ns, batch, cap, hkv, hd), kv_dt)
+            c["v"] = jax.ShapeDtypeStruct((ns, batch, cap, hkv, hd), kv_dt)
+            if cfg.kv_cache_dtype == "int8":
+                c["k_scale"] = jax.ShapeDtypeStruct((ns, batch, cap, hkv),
+                                                    jnp.float32)
+                c["v_scale"] = jax.ShapeDtypeStruct((ns, batch, cap, hkv),
+                                                    jnp.float32)
+        if kind == "adx":
+            p = cfg.n_patches or (seq_len // cfg.audio_frames_div)
+            c["xk"] = jax.ShapeDtypeStruct((ns, batch, p, hkv, hd), dt)
+            c["xv"] = jax.ShapeDtypeStruct((ns, batch, p, hkv, hd), dt)
+        if kind in ("md", "me"):
+            c["ssm"] = jax.ShapeDtypeStruct(
+                (ns, batch, cfg.d_inner, cfg.mamba_d_state), jnp.float32)
+            c["conv"] = jax.ShapeDtypeStruct(
+                (ns, batch, cfg.mamba_d_conv - 1, cfg.d_inner), dt)
+        if kind in ("xm", "xs"):
+            p = int(cfg.xlstm_proj_factor * cfg.d_model)
+            p -= p % cfg.n_heads
+            dh = p // cfg.n_heads
+            if kind == "xm":
+                c["c"] = jax.ShapeDtypeStruct(
+                    (ns, batch, cfg.n_heads, dh, dh), jnp.float32)
+            else:
+                c["c"] = jax.ShapeDtypeStruct(
+                    (ns, batch, cfg.n_heads, dh), jnp.float32)
+            c["n"] = jax.ShapeDtypeStruct(
+                (ns, batch, cfg.n_heads) + ((dh,) if kind == "xm" else ()),
+                jnp.float32)
+            c["m"] = jax.ShapeDtypeStruct((ns, batch, cfg.n_heads), jnp.float32)
+        if c:
+            out[str(i)] = c
+    return out

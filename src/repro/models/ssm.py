@@ -1,0 +1,69 @@
+"""Mamba selective-SSM mixer (Jamba's recurrent block).
+
+Training/prefill run the recurrence with ``lax.scan`` over the sequence
+(selective scan is inherently sequential in S; chunked parallel forms trade
+FLOPs for latency — noted in EXPERIMENTS §Perf).  Decode is a single-step
+state update: state (B, d_inner, d_state) + conv tail (B, d_conv-1, d_inner)
+— O(1) per token, which is what makes the 500k-decode cell admissible.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_mixer(x, params: Dict, cfg, state: Tuple = None):
+    """x: (B, S, d). Returns (y, new_state).
+
+    state = (ssm_state (B, di, ds), conv_state (B, d_conv-1, di)) or None
+    for a fresh sequence (training/prefill from scratch).
+    """
+    b, s, d = x.shape
+    di, ds, dc = cfg.d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    dtr = cfg.dt_rank
+    cdt = x.dtype
+
+    xz = x @ params["in_proj"].astype(cdt)            # (B, S, 2*di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv over S
+    conv_w = params["conv_w"].astype(cdt)             # (dc, di)
+    if state is None:
+        tail = jnp.zeros((b, dc - 1, di), cdt)
+    else:
+        tail = state[1].astype(cdt)
+    xi_pad = jnp.concatenate([tail, xi], axis=1)      # (B, S+dc-1, di)
+    conv = sum(xi_pad[:, t:t + s, :] * conv_w[t] for t in range(dc))
+    conv = conv + params["conv_b"].astype(cdt)
+    new_tail = xi_pad[:, -(dc - 1):, :] if dc > 1 else jnp.zeros((b, 0, di), cdt)
+    u = jax.nn.silu(conv)                             # (B, S, di)
+
+    # input-dependent SSM params
+    proj = u @ params["x_proj"].astype(cdt)           # (B, S, dtr+2*ds)
+    dt_r, b_t, c_t = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"].astype(cdt)
+                         + params["dt_bias"].astype(cdt))  # (B, S, di)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))      # (di, ds)
+
+    h0 = (jnp.zeros((b, di, ds), jnp.float32) if state is None
+          else state[0].astype(jnp.float32))
+
+    def step(h, ins):
+        dt_t, b_tt, c_tt, u_t = ins  # (B,di) (B,ds) (B,ds) (B,di)
+        da = jnp.exp(dt_t[..., None].astype(jnp.float32) * a)      # (B,di,ds)
+        dbu = (dt_t * u_t)[..., None].astype(jnp.float32) \
+            * b_tt[:, None, :].astype(jnp.float32)                  # (B,di,ds)
+        h = da * h + dbu
+        y = jnp.einsum("bis,bs->bi", h, c_tt.astype(jnp.float32))
+        return h, y
+
+    xs = (dt.transpose(1, 0, 2), b_t.transpose(1, 0, 2),
+          c_t.transpose(1, 0, 2), u.transpose(1, 0, 2))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(cdt)             # (B, S, di)
+    y = y + u * params["d_skip"].astype(cdt)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(cdt)
+    return out, (h_last, new_tail)

@@ -1,0 +1,119 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM: pre-up-projection block — up-project to ``pf*d``, q/k/v heads over the
+inner dim, exponential input/forget gating with the max-state stabilizer,
+matrix memory C (B, NH, dh, dh), normalizer n (B, NH, dh).  Recurrent scan
+for training (chunkwise-parallel forms are a §Perf note), O(1) state decode —
+the canonical long-context architecture (long_500k runs).
+
+sLSTM: scalar-memory variant with exponential gating (simplified: gates from
+the current input only; the paper's recurrent gate connections are noted in
+DESIGN.md as a deviation), followed by the same up/down projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _heads(x, nh):
+    b, s, p = x.shape
+    return x.reshape(b, s, nh, p // nh)
+
+
+def mlstm_block(x, params: Dict, cfg, state=None):
+    """x: (B, S, d) -> (y, new_state).
+
+    state: (C (B,NH,dh,dh), n (B,NH,dh), m (B,NH)) or None.
+    """
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    cdt = x.dtype
+    up = x @ params["up_proj"].astype(cdt)            # (B, S, 2p)
+    xm, z = jnp.split(up, 2, axis=-1)                 # (B, S, p)
+    p = xm.shape[-1]
+    dh = p // nh
+
+    xh = _heads(xm, nh)                               # (B, S, NH, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, params["wq"].astype(cdt))
+    k = jnp.einsum("bshd,hde->bshe", xh, params["wk"].astype(cdt)) / jnp.sqrt(
+        jnp.asarray(dh, cdt))
+    v = jnp.einsum("bshd,hde->bshe", xh, params["wv"].astype(cdt))
+    gates = xm @ params["w_gates"].astype(cdt)        # (B, S, 2*NH)
+    ig, fg = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B, S, NH)
+
+    if state is None:
+        c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = [t.astype(jnp.float32) for t in state]
+
+    def step(carry, ins):
+        c, n, m = carry
+        qt, kt, vt, it, ft = ins  # (B,NH,dh) x3, (B,NH) x2
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        c = f_p[..., None, None] * c + i_p[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])      # (B,NH,dh,dh)
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhij,bhj->bhi", c, qt.astype(jnp.float32))
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhj,bhj->bh", n, qt.astype(jnp.float32))),
+            1.0)
+        h = num / den[..., None]
+        return (c, n, m_new), h.astype(cdt)
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), ig.transpose(1, 0, 2),
+          fg.transpose(1, 0, 2))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, p)
+    h = h * jax.nn.silu(z)
+    y = h @ params["down_proj"].astype(cdt)
+    return y, (c, n, m)
+
+
+def slstm_block(x, params: Dict, cfg, state=None):
+    """Scalar-memory sLSTM with exponential gating; state (c, n, m)."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    cdt = x.dtype
+    up = x @ params["up_proj"].astype(cdt)
+    xm, zg = jnp.split(up, 2, axis=-1)
+    p = xm.shape[-1]
+    dh = p // nh
+
+    zt = jnp.tanh(jnp.einsum("bshd,hde->bshe", _heads(xm, nh),
+                             params["wz"].astype(cdt)))       # (B,S,NH,dh)
+    gates = (xm @ params["w_gates"].astype(cdt)).astype(jnp.float32)
+    ig, fg, og = jnp.split(gates, 3, axis=-1)                 # (B,S,NH)
+
+    if state is None:
+        c0 = jnp.zeros((b, nh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = [t.astype(jnp.float32) for t in state]
+
+    def step(carry, ins):
+        c, n, m = carry
+        z_t, i_t, f_t, o_t = ins
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_t + m - m_new)
+        c = f_p[..., None] * c + i_p[..., None] * z_t.astype(jnp.float32)
+        n = f_p * n + i_p
+        h = jax.nn.sigmoid(o_t)[..., None] * c / jnp.maximum(n, 1.0)[..., None]
+        return (c, n, m_new), h.astype(cdt)
+
+    xs = (zt.transpose(1, 0, 2, 3), ig.transpose(1, 0, 2),
+          fg.transpose(1, 0, 2), og.transpose(1, 0, 2))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, p)
+    h = h * jax.nn.silu(zg)
+    y = h @ params["down_proj"].astype(cdt)
+    return y, (c, n, m)

@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamWConfig, apply_updates, cosine_schedule, init_state

@@ -1,0 +1,21 @@
+"""PIM algorithms on the PartitionPIM core: executor, arithmetic, cost model."""
+from repro.pim import executor
+from repro.pim.mult_serial import SerialMultiplier, build_serial_multiplier
+from repro.pim.multpim import PartitionedMultiplier, build_multpim
+from repro.pim.matmul import PimDot, build_dot, pim_matmul_int
+from repro.pim.cost_model import GemmCost, PimDeviceParams, gemm_cost, mult_cost
+
+__all__ = [
+    "executor",
+    "SerialMultiplier",
+    "build_serial_multiplier",
+    "PartitionedMultiplier",
+    "build_multpim",
+    "PimDot",
+    "build_dot",
+    "pim_matmul_int",
+    "GemmCost",
+    "PimDeviceParams",
+    "gemm_cost",
+    "mult_cost",
+]

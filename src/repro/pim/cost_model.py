@@ -1,0 +1,135 @@
+"""Analytical PIM cost model for LM workloads (Bitlet-style [18]).
+
+Scales the *measured* per-row program costs (cycles, gates, control bits —
+from the cycle-accurate simulator) to full LM-layer GEMMs, using the same
+mapping as ``pim/matmul.py``: one output element per crossbar row, K
+multiply-accumulate steps per row, all rows/crossbars in parallel.
+
+This is how the paper's contribution meets the assigned architectures
+(DESIGN.md §3): for any ``Linear`` in any of the 10 LM configs, the model
+reports what executing it on a PartitionPIM memristive accelerator would
+cost under each partition design, including the controller->crossbar
+traffic that the paper's control designs reduce by 607/79/36 bits per cycle.
+
+Device assumptions (documented, configurable):
+* crossbar: 1024 x 1024, k=32 partitions (paper's evaluation point);
+* cycle time 10 ns (memristor SET/RESET limited);
+* switching energy 0.1 pJ/gate  (order-of-magnitude RRAM figure);
+* TPU v5e comparison point: 197 TFLOP/s bf16, 819 GB/s HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict
+
+from repro.core.control import message_bits
+from repro.core.operation import PartitionConfig
+
+__all__ = ["PimDeviceParams", "GemmCost", "gemm_cost", "mult_cost"]
+
+TPU_PEAK_FLOPS = 197e12
+TPU_HBM_BW = 819e9
+
+
+@dataclasses.dataclass(frozen=True)
+class PimDeviceParams:
+    n_cols: int = 1024
+    n_rows: int = 1024
+    k: int = 32
+    cycle_ns: float = 10.0
+    gate_energy_pj: float = 0.1
+    crossbars: int = 65536  # one "PIM chip" = 64Gb of memristors
+
+
+@functools.lru_cache(maxsize=None)
+def mult_cost(n_bits: int, model: str, n_cols: int = 1024) -> Dict[str, int]:
+    """Measured per-row multiplication cost from the built programs."""
+    if model == "baseline":
+        from repro.pim.mult_serial import build_serial_multiplier
+
+        prog = build_serial_multiplier(n_bits, n_cols).program
+    else:
+        from repro.pim.multpim import build_multpim
+
+        prog = build_multpim(n_bits, n_cols, model=model).program
+    st = prog.stats()
+    return dict(cycles=st.cycles, gates=st.energy_gates,
+                area=st.area_columns,
+                msg_bits=st.control_bits_per_message)
+
+
+@functools.lru_cache(maxsize=None)
+def _dot_extra_cost(n_bits: int, model: str) -> Dict[str, int]:
+    """Per-term cost (copies + multiply + accumulate) of the dot mapping.
+
+    Partition models: measured from ``build_dot`` (carry-save accumulate).
+    Baseline: the serial multiplier plus a serial ripple accumulate and
+    per-bit operand copies (a crossbar without partitions executes one gate
+    per cycle; there is nothing to fuse)."""
+    if model == "baseline":
+        mc = mult_cost(n_bits, "baseline")
+        n = n_bits
+        ripple = (2 * n + 2) * 13      # FA chain incl. per-position inits
+        copies = 4 * n + 2             # double-NOT per input bit + inits
+        return dict(cycles=mc["cycles"] + ripple + copies,
+                    gates=mc["gates"] + (2 * n + 2) * 10 + 4 * n)
+    from repro.pim.matmul import build_dot
+
+    def build(n):
+        try:
+            return build_dot(n, n_bits, model=model)
+        except ValueError:  # wide operands need a wider crossbar (m = n/k)
+            return build_dot(n, n_bits, n_cols=4096, model=model)
+
+    one = build(1).program.stats()
+    two = build(2).program.stats()
+    return dict(cycles=two.cycles - one.cycles,
+                gates=two.energy_gates - one.energy_gates)
+
+
+@dataclasses.dataclass
+class GemmCost:
+    model: str
+    n_bits: int
+    m: int
+    k_dim: int
+    n: int
+    crossbars: int          # concurrently busy crossbars
+    waves: int              # sequential waves if the chip is smaller
+    cycles_per_wave: int
+    time_s: float
+    energy_j: float
+    control_bits: int       # controller->crossbar traffic for the whole GEMM
+    tpu_time_s: float       # bf16 MXU reference point
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.k_dim * self.n
+
+
+def gemm_cost(m: int, k_dim: int, n: int, n_bits: int = 8,
+              model: str = "minimal",
+              dev: PimDeviceParams = PimDeviceParams()) -> GemmCost:
+    """Cost of ``(m x k_dim) @ (k_dim x n)`` on a PartitionPIM accelerator."""
+    per_term = _dot_extra_cost(n_bits, model)
+    rows_needed = m * n
+    rows_per_cb = dev.n_rows
+    cbs_needed = -(-rows_needed // rows_per_cb)
+    waves = -(-cbs_needed // dev.crossbars)
+    busy = min(cbs_needed, dev.crossbars)
+    cycles = k_dim * per_term["cycles"]
+    time_s = waves * cycles * dev.cycle_ns * 1e-9
+    # energy: gates per row x rows actually computing
+    gates = k_dim * per_term["gates"] * rows_needed
+    energy_j = gates * dev.gate_energy_pj * 1e-12
+    # control: one message per cycle per (independently-programmed) crossbar
+    # column group — crossbars executing the same program share a broadcast
+    # message, so traffic is cycles x message_bits per wave.
+    bits = waves * cycles * mult_cost(n_bits, model)["msg_bits"]
+    tpu_time = max(2.0 * m * k_dim * n / TPU_PEAK_FLOPS,
+                   (m * k_dim + k_dim * n + m * n) * 2 / TPU_HBM_BW)
+    return GemmCost(model=model, n_bits=n_bits, m=m, k_dim=k_dim, n=n,
+                    crossbars=busy, waves=waves, cycles_per_wave=cycles,
+                    time_s=time_s, energy_j=energy_j, control_bits=bits,
+                    tpu_time_s=tpu_time)

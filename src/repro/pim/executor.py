@@ -1,0 +1,170 @@
+"""Vectorized crossbar simulator: execute microcode over bit-packed state.
+
+TPU-native adaptation of stateful logic (DESIGN.md §2): a stateful-logic gate
+acts on *whole columns*, identically across rows, so we bit-pack 32 rows into
+one ``uint32`` word.  Crossbar state is ``(C, n, W)``: ``C`` independent
+crossbars, ``n`` columns (bitlines), ``W = ceil(rows/32)`` row-words.  A gate
+is then a bitwise op on ``(C, W)`` slices — ideal for TPU VPU lanes (and CPU
+SIMD in this container).
+
+Two backends:
+
+* :func:`execute` — pure-jnp ``lax.scan`` over the microcode (also the
+  oracle for the Pallas kernel, re-exported as ``kernels.crossbar_exec.ref``);
+* ``kernels/crossbar_exec`` — the Pallas TPU kernel (VMEM-tiled), validated
+  against this oracle in interpret mode.
+
+The microcode ABI is produced by :meth:`repro.core.program.Program.to_microcode`:
+int32 rows ``(gate_code, in_a, in_b, out)``; gate codes from
+``repro.core.gates.GATE_CODES`` (INIT=0 sets the output column to all-ones).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gates import ALL_ONES
+
+__all__ = [
+    "blank_state",
+    "pack_rows",
+    "unpack_rows",
+    "write_bits",
+    "read_bits",
+    "write_numbers",
+    "read_numbers",
+    "execute",
+    "execute_unrolled",
+]
+
+
+def blank_state(crossbars: int, n: int, rows: int) -> jnp.ndarray:
+    """All-zero crossbar state ``(C, n, W)`` (memristors in RESET)."""
+    w = (rows + 31) // 32
+    return jnp.zeros((crossbars, n, w), jnp.uint32)
+
+
+def pack_rows(bits: np.ndarray) -> np.ndarray:
+    """Pack boolean ``(..., rows)`` into uint32 words ``(..., W)`` (LSB=row 0)."""
+    bits = np.asarray(bits, np.uint8)
+    rows = bits.shape[-1]
+    pad = (-rows) % 32
+    if pad:
+        bits = np.concatenate(
+            [bits, np.zeros(bits.shape[:-1] + (pad,), np.uint8)], axis=-1
+        )
+    b = bits.reshape(bits.shape[:-1] + (-1, 32)).astype(np.uint32)
+    shifts = np.arange(32, dtype=np.uint32)
+    return (b << shifts).sum(axis=-1, dtype=np.uint32)
+
+
+def unpack_rows(words: np.ndarray, rows: int) -> np.ndarray:
+    """Inverse of :func:`pack_rows` -> boolean ``(..., rows)``."""
+    words = np.asarray(words, np.uint32)
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = (words[..., None] >> shifts) & 1
+    bits = bits.reshape(words.shape[:-1] + (-1,))
+    return bits[..., :rows].astype(bool)
+
+
+def write_bits(state: jnp.ndarray, col: int, bits: np.ndarray) -> jnp.ndarray:
+    """Write per-row bits (C, rows) into one column."""
+    return state.at[:, col, :].set(jnp.asarray(pack_rows(bits)))
+
+
+def read_bits(state: jnp.ndarray, col: int, rows: int) -> np.ndarray:
+    return unpack_rows(np.asarray(state[:, col, :]), rows)
+
+
+def write_numbers(
+    state: jnp.ndarray, cols: Tuple[int, ...], values: np.ndarray
+) -> jnp.ndarray:
+    """Write integers ``values`` (C, rows) bit-sliced onto ``cols`` (LSB first)."""
+    values = np.asarray(values, np.uint64)
+    for bit, col in enumerate(cols):
+        state = write_bits(state, col, (values >> np.uint64(bit)) & np.uint64(1))
+    return state
+
+
+def read_numbers(state: jnp.ndarray, cols: Tuple[int, ...], rows: int) -> np.ndarray:
+    """Read integers from bit-sliced columns (LSB first) -> (C, rows) uint64."""
+    out = np.zeros(state.shape[:1] + (rows,), np.uint64)
+    for bit, col in enumerate(cols):
+        out |= read_bits(state, col, rows).astype(np.uint64) << np.uint64(bit)
+    return out
+
+
+def _apply_gate(code, a, b):
+    """Gate semantics on packed words; order must match GATE_CODES."""
+    return jax.lax.switch(
+        code,
+        [
+            lambda a, b: jnp.full_like(a, ALL_ONES),          # INIT
+            lambda a, b: jnp.bitwise_not(a),                  # NOT
+            lambda a, b: jnp.bitwise_not(jnp.bitwise_or(a, b)),   # NOR
+            lambda a, b: jnp.bitwise_or(a, b),                # OR
+            lambda a, b: jnp.bitwise_not(jnp.bitwise_and(a, b)),  # NAND
+            lambda a, b: jnp.bitwise_and(a, b),               # AND
+        ],
+        a,
+        b,
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def execute(state: jnp.ndarray, microcode: jnp.ndarray) -> jnp.ndarray:
+    """Run flat microcode ``(G, 4)`` int32 over state ``(C, n, W)``.
+
+    ``lax.scan`` keeps the HLO size O(1) in program length; each step is a
+    3-column dynamic gather + 1-column dynamic update — the whole scan stays
+    resident, so HBM traffic on real hardware is one read/write of the state.
+    """
+
+    def step(words, mc):
+        code, ia, ib, out = mc[0], mc[1], mc[2], mc[3]
+        a = jnp.take(words, ia, axis=1)  # (C, W)
+        b = jnp.take(words, ib, axis=1)
+        res = _apply_gate(code, a, b)
+        words = jax.lax.dynamic_update_slice_in_dim(
+            words, res[:, None, :], out, axis=1
+        )
+        return words, None
+
+    state, _ = jax.lax.scan(step, state, microcode)
+    return state
+
+
+def execute_unrolled(state: jnp.ndarray, microcode: np.ndarray) -> jnp.ndarray:
+    """Python-unrolled variant (static indices; no scan).
+
+    Faster per-step on small programs — XLA sees static column indices and
+    fuses runs of bitwise ops — but compile time grows with program length.
+    Used by the throughput benchmark to compare against :func:`execute`.
+    """
+    microcode = np.asarray(microcode)
+
+    @jax.jit
+    def run(words):
+        for code, ia, ib, out in microcode.tolist():
+            a = words[:, ia, :]
+            b = words[:, ib, :]
+            if code == 0:
+                res = jnp.full_like(a, ALL_ONES)
+            elif code == 1:
+                res = jnp.bitwise_not(a)
+            elif code == 2:
+                res = jnp.bitwise_not(jnp.bitwise_or(a, b))
+            elif code == 3:
+                res = jnp.bitwise_or(a, b)
+            elif code == 4:
+                res = jnp.bitwise_not(jnp.bitwise_and(a, b))
+            else:
+                res = jnp.bitwise_and(a, b)
+            words = words.at[:, out, :].set(res)
+        return words
+
+    return run(state)

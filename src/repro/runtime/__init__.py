@@ -1,0 +1,2 @@
+from repro.runtime.fault_tolerance import (CheckpointManager, ElasticMesh,
+                                           StragglerMonitor, run_with_restarts)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests must see the real device count (1 CPU); the 512-device trick is
+# exclusively for launch/dryrun.py (see the brief)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

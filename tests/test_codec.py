@@ -1,0 +1,99 @@
+"""Control codec round-trips, including property-based random legal ops."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GateOp, InitOp, Operation, PartitionConfig, decode,
+                        encode, message_bits, validate)
+
+CFG = PartitionConfig(1024, 32)
+
+
+def _roundtrip(op, model, gate_type):
+    msg = encode(op, CFG, model)
+    # frame adds 2 bits on top of the paper-counted payload
+    assert len(msg) == message_bits(model, CFG) + 2
+    back = decode(msg, CFG, model, gate_type)
+    if op.is_init:
+        assert set(back.init.columns(CFG)) == set(op.init.columns(CFG))
+    else:
+        assert {(g.gate, g.inputs, g.output) for g in back.gates} == \
+            {(g.gate, g.inputs, g.output) for g in op.gates}
+
+
+def test_serial_roundtrip_all_models():
+    op = Operation(gates=(GateOp("NOR", (5, 700), 900),))
+    _roundtrip(op, "baseline", "NOR")
+    _roundtrip(op, "unlimited", "NOR")
+    op2 = Operation(gates=(GateOp("NOR", (CFG.col(3, 1), CFG.col(3, 7)),
+                                  CFG.col(9, 2)),))
+    for model in ("standard", "minimal"):
+        _roundtrip(op2, model, "NOR")
+
+
+def test_split_input_roundtrip_unlimited_only():
+    op = Operation(gates=(GateOp("NOR", (CFG.col(0, 4), CFG.col(2, 9)),
+                                 CFG.col(5, 1)),))
+    _roundtrip(op, "unlimited", "NOR")
+
+
+@given(
+    intra=st.tuples(st.integers(0, 31), st.integers(0, 31),
+                    st.integers(0, 31)).filter(
+        lambda t: len({t[0], t[1]}) == 2 and t[2] not in t[:2]),
+    period=st.sampled_from([1, 2, 4, 8, 16]),
+    start=st.integers(0, 15),
+)
+@settings(max_examples=40, deadline=None)
+def test_parallel_periodic_roundtrip(intra, period, start):
+    """Random within-partition periodic ops are legal + codable everywhere."""
+    ia, ib, io = intra
+    parts = list(range(start, CFG.k, period))
+    op = Operation(gates=tuple(
+        GateOp("NOR", (CFG.col(p, ia), CFG.col(p, ib)), CFG.col(p, io))
+        for p in parts))
+    for model in ("unlimited", "standard", "minimal"):
+        validate(op, CFG, model)
+        _roundtrip(op, model, "NOR")
+
+
+@given(
+    dist=st.integers(1, 7),
+    extra=st.integers(1, 8),
+    start=st.integers(0, 7),
+    direction=st.sampled_from([+1, -1]),
+    intra=st.tuples(st.integers(0, 31), st.integers(0, 31)),
+)
+@settings(max_examples=40, deadline=None)
+def test_semiparallel_periodic_roundtrip(dist, extra, start, direction, intra):
+    """Random uniform-distance periodic copy ops round-trip in every model."""
+    period = dist + extra
+    src_intra, dst_intra = intra
+    gates = []
+    p = start
+    while 0 <= p + direction * dist < CFG.k and p < CFG.k:
+        gates.append(GateOp("NOT", (CFG.col(p, src_intra),),
+                            CFG.col(p + direction * dist, dst_intra)))
+        p += period
+    if not gates:
+        return
+    op = Operation(gates=tuple(gates))
+    for model in ("unlimited", "standard", "minimal"):
+        validate(op, CFG, model)
+        _roundtrip(op, model, "NOT")
+
+
+def test_init_roundtrips():
+    for model in ("baseline", "unlimited", "standard", "minimal"):
+        _roundtrip(Operation(init=InitOp("range", 40, 50)), model, "INIT")
+    for model in ("unlimited", "standard", "minimal"):
+        _roundtrip(Operation(init=InitOp("periodic", 3, 9, 0, 28, 4)),
+                   model, "INIT")
+    # spanning range init: standard encodes arbitrary end partitions
+    _roundtrip(Operation(init=InitOp("range", 10, 200)), "standard", "INIT")
+
+
+def test_illegal_op_refused_by_encoder():
+    op = Operation(gates=(GateOp("NOR", (CFG.col(0, 0), CFG.col(1, 0)),
+                                 CFG.col(2, 0)),))
+    with pytest.raises(Exception):
+        encode(op, CFG, "minimal")

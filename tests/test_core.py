@@ -1,0 +1,219 @@
+"""Core PIM library: gates, partitions, legality, periphery, bounds."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (GATE_DEFS, GateOp, InitOp, LegalityError, Operation,
+                        PartitionConfig, bounds, is_legal, message_bits,
+                        op_intervals, tight_selects, validate)
+from repro.core.periphery import (minimal_range_generator, op_opcodes,
+                                  sections_from_selects, simulate_voltages,
+                                  standard_opcode_generator)
+
+CFG = PartitionConfig(1024, 32)
+
+
+# ---------------------------------------------------------------------------
+# gates
+# ---------------------------------------------------------------------------
+
+@given(a=st.integers(0, 2**32 - 1), b=st.integers(0, 2**32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_gate_semantics_bitwise(a, b):
+    aw = jnp.uint32(a)
+    bw = jnp.uint32(b)
+    m = (1 << 32) - 1
+    assert int(GATE_DEFS["NOT"](aw)) == (~a) & m
+    assert int(GATE_DEFS["NOR"](aw, bw)) == (~(a | b)) & m
+    assert int(GATE_DEFS["OR"](aw, bw)) == (a | b) & m
+    assert int(GATE_DEFS["NAND"](aw, bw)) == (~(a & b)) & m
+    assert int(GATE_DEFS["AND"](aw, bw)) == (a & b) & m
+    assert int(GATE_DEFS["INIT"]()) == m
+
+
+# ---------------------------------------------------------------------------
+# partitions / sections
+# ---------------------------------------------------------------------------
+
+def test_partition_indexing():
+    assert CFG.m == 32
+    assert CFG.partition(0) == 0 and CFG.partition(1023) == 31
+    assert CFG.intra(33) == 1 and CFG.col(1, 1) == 33
+    with pytest.raises(ValueError):
+        CFG.partition(1024)
+
+
+def test_overlapping_sections_rejected():
+    op = Operation(gates=(
+        GateOp("NOT", (CFG.col(0, 0),), CFG.col(2, 0)),
+        GateOp("NOT", (CFG.col(1, 0),), CFG.col(3, 0)),
+    ))
+    with pytest.raises(LegalityError):
+        op_intervals(op, CFG)
+    for model in ("unlimited", "standard", "minimal"):
+        assert not is_legal(op, CFG, model)
+
+
+def test_tight_selects():
+    op = Operation(gates=(GateOp("NOT", (CFG.col(1, 0),), CFG.col(3, 0)),))
+    sel = tight_selects(op, CFG)
+    # transistors 1,2 conduct (span the gate); everything else isolates
+    assert sel[1] is False and sel[2] is False
+    assert sel[0] is True and all(sel[3:])
+    secs = sections_from_selects(sel)
+    assert (1, 3) in secs
+
+
+# ---------------------------------------------------------------------------
+# model legality matrix
+# ---------------------------------------------------------------------------
+
+def _parallel_op(intra=(0, 1, 2)):
+    return Operation(gates=tuple(
+        GateOp("NOR", (CFG.col(p, intra[0]), CFG.col(p, intra[1])),
+               CFG.col(p, intra[2])) for p in range(CFG.k)))
+
+
+def test_parallel_op_legal_everywhere():
+    op = _parallel_op()
+    for model in ("unlimited", "standard", "minimal"):
+        validate(op, CFG, model)
+    assert op.classify(CFG) == "parallel"
+    assert not is_legal(op, CFG, "baseline")
+
+
+def test_identical_indices_criterion():
+    gates = list(_parallel_op().gates)
+    gates[3] = GateOp("NOR", (CFG.col(3, 4), CFG.col(3, 1)), CFG.col(3, 2))
+    op = Operation(gates=tuple(gates))
+    assert is_legal(op, CFG, "unlimited")
+    assert not is_legal(op, CFG, "standard")
+    assert not is_legal(op, CFG, "minimal")
+
+
+def test_split_input_criterion():
+    op = Operation(gates=(GateOp("NOR", (CFG.col(0, 0), CFG.col(1, 0)),
+                                 CFG.col(2, 0)),))
+    assert is_legal(op, CFG, "unlimited")
+    assert not is_legal(op, CFG, "standard")
+
+
+def test_uniform_direction_criterion():
+    op = Operation(gates=(
+        GateOp("NOT", (CFG.col(1, 0),), CFG.col(0, 0)),
+        GateOp("NOT", (CFG.col(4, 0),), CFG.col(5, 0)),
+    ))
+    assert is_legal(op, CFG, "unlimited")
+    assert not is_legal(op, CFG, "standard")
+
+
+def test_minimal_periodic_criterion():
+    # periodic distance-2 copies, period 4: minimal-legal
+    ok = Operation(gates=tuple(
+        GateOp("NOT", (CFG.col(p, 0),), CFG.col(p + 2, 0))
+        for p in (0, 4, 8, 12)))
+    validate(ok, CFG, "minimal")
+    # non-periodic input partitions: standard-legal, minimal-illegal
+    bad = Operation(gates=tuple(
+        GateOp("NOT", (CFG.col(p, 0),), CFG.col(p + 2, 0))
+        for p in (0, 4, 12)))
+    assert is_legal(bad, CFG, "standard")
+    assert not is_legal(bad, CFG, "minimal")
+    # period must exceed distance
+    tight = Operation(gates=tuple(
+        GateOp("NOT", (CFG.col(p, 0),), CFG.col(p + 2, 0))
+        for p in (0, 2)))
+    assert not is_legal(tight, CFG, "minimal")  # and physically overlapping
+    assert not is_legal(tight, CFG, "unlimited")
+
+
+def test_mixed_distance_minimal_illegal():
+    op = Operation(gates=(
+        GateOp("NOT", (CFG.col(0, 0),), CFG.col(1, 0)),
+        GateOp("NOT", (CFG.col(8, 0),), CFG.col(10, 0)),
+    ))
+    assert is_legal(op, CFG, "standard")
+    assert not is_legal(op, CFG, "minimal")
+
+
+def test_one_gate_type_per_operation():
+    with pytest.raises(LegalityError):
+        Operation(gates=(
+            GateOp("NOT", (CFG.col(0, 0),), CFG.col(0, 1)),
+            GateOp("NOR", (CFG.col(4, 0), CFG.col(4, 1)), CFG.col(4, 2)),
+        ))
+
+
+# ---------------------------------------------------------------------------
+# message lengths & lower bounds (paper §2.3/§3.3/§4.3)
+# ---------------------------------------------------------------------------
+
+def test_paper_message_lengths():
+    assert message_bits("baseline", CFG) == 30
+    assert message_bits("unlimited", CFG) == 607
+    assert message_bits("standard", CFG) == 79
+    assert message_bits("minimal", CFG) == 36
+
+
+def test_lower_bounds_match_paper():
+    assert bounds.unlimited_lower_bound(CFG) == 444  # paper: "over 2^443"
+    assert bounds.standard_lower_bound(CFG) == 46
+    assert bounds.minimal_lower_bound(CFG) == 25
+
+
+def test_bounds_below_implemented_lengths():
+    for model, lb in (("unlimited", bounds.unlimited_lower_bound(CFG)),
+                      ("standard", bounds.standard_lower_bound(CFG)),
+                      ("minimal", bounds.minimal_lower_bound(CFG))):
+        assert lb <= message_bits(model, CFG)
+
+
+# ---------------------------------------------------------------------------
+# periphery: half-gates, opcode generation, range generator
+# ---------------------------------------------------------------------------
+
+def test_half_gate_voltage_reconstruction():
+    op = _parallel_op()
+    opcodes, selects = op_opcodes(op, CFG)
+    gates = simulate_voltages(opcodes, selects, CFG, "NOR")
+    assert {(g.inputs, g.output) for g in gates} == \
+        {(g.inputs, g.output) for g in op.gates}
+
+
+def test_standard_opcode_generator_matches_direct_opcodes():
+    # distance-1 copies, period 2 ("inputs left of outputs")
+    op = Operation(gates=tuple(
+        GateOp("NOT", (CFG.col(p, 3),), CFG.col(p + 1, 5))
+        for p in range(0, 30, 2)))
+    opcodes, selects = op_opcodes(op, CFG)
+    active = [False] * CFG.k
+    for p in range(0, 30, 2):
+        active[p] = active[p + 1] = True
+    trios = standard_opcode_generator(selects, active, +1)
+    for p in range(CFG.k):
+        en_a, en_b, en_out = trios[p]
+        assert en_a == opcodes[p].en_a
+        assert en_out == opcodes[p].en_out
+
+
+def test_minimal_range_generator():
+    in_en, out_en, selects = minimal_range_generator(
+        32, p_start=0, p_end=28, period=4, distance=2, direction=+1)
+    assert [p for p in range(32) if in_en[p]] == [0, 4, 8, 12, 16, 20, 24, 28]
+    assert [p for p in range(32) if out_en[p]] == [2, 6, 10, 14, 18, 22, 26, 30]
+    secs = sections_from_selects(selects)
+    assert (0, 2) in secs and (4, 6) in secs
+
+
+def test_too_many_output_drivers_detected():
+    from repro.core.periphery import PartitionOpcode
+
+    opcodes = [PartitionOpcode()] * 30 + [
+        PartitionOpcode(en_out=True, idx_out=0),
+        PartitionOpcode(en_out=True, idx_out=0),
+    ]
+    selects = [True] * 30 + [False]  # last two partitions share a section
+    with pytest.raises(LegalityError):
+        simulate_voltages(opcodes, selects, CFG, "NOT")

@@ -1,0 +1,88 @@
+"""The paper's case study: bit-exact multipliers + §5 evaluation properties."""
+import numpy as np
+import pytest
+
+from repro.pim import executor as ex
+from repro.pim.mult_serial import build_serial_multiplier
+from repro.pim.multpim import build_multpim
+
+MODELS = ("unlimited", "standard", "minimal")
+
+
+def _check(mult, rows=64, crossbars=2, seed=0):
+    n = mult.n_bits
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << n, size=(crossbars, rows), dtype=np.uint64)
+    b = rng.integers(0, 1 << n, size=(crossbars, rows), dtype=np.uint64)
+    a[0, :4] = [0, (1 << n) - 1, 1, (1 << n) - 1]
+    b[0, :4] = [0, (1 << n) - 1, (1 << n) - 1, 1]
+    state = ex.blank_state(crossbars, mult.program.cfg.n, rows)
+    state = ex.write_numbers(state, mult.a_cols, a)
+    state = ex.write_numbers(state, mult.b_cols, b)
+    state = ex.execute(state, mult.program.to_microcode())
+    got = ex.read_numbers(state, mult.result_cols, rows)
+    assert np.array_equal(got.astype(object), a.astype(object) * b.astype(object))
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_serial_multiplier_exact(n):
+    m = build_serial_multiplier(n)
+    m.program.validate()
+    _check(m)
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_multpim_exact(model, n):
+    m = build_multpim(n, model=model)
+    m.program.validate()
+    _check(m)
+
+
+def test_paper_speedups_32bit():
+    """§5.1: partitions keep ~9x of the serial latency at 32 bits."""
+    serial = build_serial_multiplier(32).program.stats().cycles
+    cycles = {m: build_multpim(32, model=m).program.stats().cycles
+              for m in MODELS}
+    for m in MODELS:
+        speedup = serial / cycles[m]
+        assert 7.0 <= speedup <= 13.0, (m, speedup)
+    # restricted models may not beat unlimited
+    assert cycles["unlimited"] <= cycles["standard"] <= cycles["minimal"]
+    # paper: standard/minimal within ~1.35x of unlimited
+    assert cycles["minimal"] / cycles["unlimited"] <= 1.35
+
+
+def test_paper_control_overheads_32bit():
+    """§5.2: per-message control = 607/79/36 vs 30 baseline bits."""
+    serial = build_serial_multiplier(32).program.stats()
+    assert serial.control_bits_per_message == 30
+    want = {"unlimited": 607, "standard": 79, "minimal": 36}
+    for m, bits in want.items():
+        st = build_multpim(32, model=m).program.stats()
+        assert st.control_bits_per_message == bits
+    # total control traffic: partitions REDUCE it (fewer messages)
+    minimal = build_multpim(32, model="minimal").program.stats()
+    assert minimal.total_control_bits < serial.total_control_bits
+
+
+def test_area_and_energy_overheads():
+    """§5.3/§5.4: parallel costs more memristors and more gate switches."""
+    s = build_serial_multiplier(32).program.stats()
+    p = build_multpim(32, model="minimal").program.stats()
+    assert p.area_columns > s.area_columns
+    assert p.energy_gates > s.energy_gates
+    assert p.area_columns / s.area_columns < 3.5
+    assert p.energy_gates / s.energy_gates < 3.5
+
+
+def test_every_message_of_every_model_roundtrips():
+    for m in MODELS:
+        build_multpim(16, model=m).program.check_messages(sample_every=3)
+    build_serial_multiplier(16).program.check_messages(sample_every=17)
+
+
+def test_op_class_mix():
+    st = build_multpim(32, model="minimal").program.stats()
+    assert st.op_class_counts.get("parallel", 0) > 200
+    assert st.op_class_counts.get("semi-parallel", 0) > 100

@@ -1,0 +1,32 @@
+"""``repro.dist`` — mesh context and partitioning for the LM stack.
+
+Mesh / axis conventions (MaxText-style logical axes, reduced to the two
+parallelism kinds this repo uses):
+
+* Axis **names** are fixed: ``"pod"`` (outermost data parallelism across
+  pods), ``"data"`` (within-pod data parallelism, doubles as the FSDP /
+  ZeRO-3 weight-sharding axis), and ``"model"`` (tensor / expert
+  parallelism).  Meshes may carry any subset — ``("data", "model")`` for a
+  single pod, ``("pod", "data", "model")`` for multi-pod, ``("data",)`` for
+  pure DP.
+* **Data-parallel axes** (``context.dp_axes()``) are, by default, every mesh
+  axis except ``"model"``; batch-like dimensions shard over them.
+  ``use_mesh(mesh, dp_axes=...)`` overrides the split (the dry-run's
+  ``dp_only`` policy passes all axes, leaving no tensor axis).
+* The **tensor-parallel axis** (``context.tp_axis()``) is ``"model"`` when
+  present and not claimed as data-parallel, else ``None``.  Heads, hidden
+  (``d_ff``), vocab, and expert dimensions shard over it.
+
+``context`` carries the active mesh in a thread-local stack so model code
+can stay mesh-agnostic: ``shard``/``shard_batch_dim`` are exact no-ops
+without a mesh and ``jax.lax.with_sharding_constraint`` inside one, and
+every constraint silently drops axes that do not divide the dimension —
+the same code runs on 1 CPU device and on a 512-chip mesh.
+
+``partitioning`` turns trees of ``jax.ShapeDtypeStruct`` into trees of
+``PartitionSpec`` / ``NamedSharding`` for params (with an ``fsdp`` knob),
+optimizer state (factored-moment aware), input batches, and decode caches.
+"""
+from repro.dist import context, partitioning
+
+__all__ = ["context", "partitioning"]

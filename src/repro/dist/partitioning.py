@@ -1,0 +1,141 @@
+"""PartitionSpec factories for the dry-run / train / serve entry points.
+
+All factories are **shape-driven**: they walk trees of
+``jax.ShapeDtypeStruct`` (or concrete arrays) and assign mesh axes per
+leaf, keeping every assignment divisible — a spec produced here always
+compiles, on any mesh, at any model size.
+
+Placement rules (see ``repro.dist.__doc__`` for the axis conventions):
+
+* **params** — the largest dim divisible by the ``"model"`` axis is
+  tensor-parallel (ties pick the later dim: column-parallel for square
+  ``(d, ff)`` weights); with ``fsdp=True`` the largest *remaining* dim
+  divisible by ``"data"`` is ZeRO-3 sharded (ties pick the earlier dim).
+* **optimizer state** — mirrors the param spec; Adafactor row/col
+  statistics inherit the surviving dims of their param's spec.
+* **batches** — leading (batch) dim over the data-parallel axes.
+* **decode caches** — dim 1 (batch; dim 0 is the stacked-layer axis) over
+  the data-parallel axes, and the head dim (-2) of rank>=4 leaves over
+  ``"model"``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.dist import context as dctx
+
+__all__ = ["param_pspecs", "opt_state_pspecs", "batch_pspecs",
+           "cache_pspecs", "tree_shardings"]
+
+FSDP_AXIS = "data"
+
+
+def _axis_size(mesh, axis: Optional[str]) -> int:
+    return mesh.shape[axis] if axis and axis in mesh.axis_names else 1
+
+
+def _is_shape_leaf(x) -> bool:
+    return hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def _pick_dim(shape, divisor: int, taken, *, prefer_late: bool) -> int:
+    """Index of the largest dim divisible by ``divisor`` (excluding
+    ``taken``), or -1.  Ties resolve to the later/earlier dim."""
+    best, best_size = -1, 0
+    dims = range(len(shape))
+    for i in (reversed(dims) if prefer_late else dims):
+        if i in taken or shape[i] % divisor or shape[i] < divisor:
+            continue
+        if shape[i] > best_size:
+            best, best_size = i, shape[i]
+    return best
+
+
+def _param_spec(shape, mesh, tp_ax: Optional[str], fsdp_ax: Optional[str]
+                ) -> PartitionSpec:
+    entries = [None] * len(shape)
+    taken = set()
+    tp_size = _axis_size(mesh, tp_ax)
+    if tp_size > 1:
+        i = _pick_dim(shape, tp_size, taken, prefer_late=True)
+        if i >= 0:
+            entries[i] = tp_ax
+            taken.add(i)
+    fsdp_size = _axis_size(mesh, fsdp_ax)
+    if fsdp_size > 1:
+        i = _pick_dim(shape, fsdp_size, taken, prefer_late=False)
+        if i >= 0:
+            entries[i] = fsdp_ax
+            taken.add(i)
+    return PartitionSpec(*entries)
+
+
+def param_pspecs(pshapes, mesh, *, fsdp: bool = False, tp: bool = True):
+    """PartitionSpec tree for a param tree. ``tp=False`` keeps weights off
+    the "model" axis (dp-only policy); ``fsdp=True`` additionally shards
+    over "data" (ZeRO-3)."""
+    _, tp_ax = dctx.mesh_axes(mesh)
+    tp_ax = tp_ax if tp else None
+    fsdp_ax = FSDP_AXIS if fsdp else None
+    return jax.tree.map(
+        lambda s: _param_spec(s.shape, mesh, tp_ax, fsdp_ax),
+        pshapes, is_leaf=_is_shape_leaf)
+
+
+def opt_state_pspecs(pshapes, param_part, opt_state, mesh):
+    """Specs for ``optim.adamw`` state: moments mirror their param's spec;
+    factored row/col stats keep the spec entries of their surviving dims;
+    the step counter replicates."""
+    flat_shapes, tdef = jax.tree.flatten(pshapes, is_leaf=_is_shape_leaf)
+    flat_specs = tdef.flatten_up_to(param_part)
+    flat_state = tdef.flatten_up_to(opt_state["leaves"])
+
+    def leaf(spec: PartitionSpec, st: Dict[str, Any]) -> Dict[str, Any]:
+        e = tuple(spec)
+        out: Dict[str, Any] = {"m": spec}
+        if "v" in st:
+            out["v"] = spec
+        else:  # Adafactor: vr = shape[:-1], vc = shape[:-2] + shape[-1:]
+            out["vr"] = PartitionSpec(*e[:-1])
+            out["vc"] = PartitionSpec(*(e[:-2] + e[-1:]))
+        return out
+
+    leaves = [leaf(sp, st) for sp, st in zip(flat_specs, flat_state)]
+    return {"step": PartitionSpec(),
+            "leaves": jax.tree.unflatten(tdef, leaves)}
+
+
+def batch_pspecs(batch, mesh):
+    """Input batches: leading dim over the data-parallel axes (dropped when
+    the global batch does not divide), everything else replicated."""
+    dp, _ = dctx.mesh_axes(mesh)
+    return jax.tree.map(
+        lambda s: dctx.pspec_for(mesh, s.shape, dp),
+        batch, is_leaf=_is_shape_leaf)
+
+
+def cache_pspecs(caches, mesh):
+    """Decode caches ``(n_super, batch, ...)``: batch dim over DP axes, the
+    head dim (-2) of rank>=4 leaves over the "model" axis."""
+    dp, tp_ax = dctx.mesh_axes(mesh)
+
+    def leaf(s):
+        nd = len(s.shape)
+        entries = [None] * nd
+        if nd >= 2:
+            entries[1] = dp
+        if nd >= 4 and tp_ax:
+            entries[-2] = tp_ax
+        return dctx.pspec_for(mesh, s.shape, *entries)
+
+    return jax.tree.map(leaf, caches, is_leaf=_is_shape_leaf)
+
+
+def tree_shardings(spec_tree, mesh):
+    """PartitionSpec tree -> NamedSharding tree on ``mesh``."""
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), spec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))

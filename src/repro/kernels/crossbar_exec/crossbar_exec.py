@@ -32,12 +32,12 @@ def _kernel(mc_ref, state_ref, out_ref):
     n_ops = mc_ref.shape[0]
 
     def body(g, _):
-        code = mc_ref[g, 0]
-        ia = mc_ref[g, 1]
-        ib = mc_ref[g, 2]
-        dst = mc_ref[g, 3]
-        a = pl.load(out_ref, (0, pl.dslice(ia, 1), slice(None)))
-        b = pl.load(out_ref, (0, pl.dslice(ib, 1), slice(None)))
+        # All-Slice indexing: python-int indices break the interpret-mode
+        # discharge rule on jax 0.4.x (they carry no .shape attribute).
+        op = pl.load(mc_ref, (pl.dslice(g, 1), slice(None)))
+        code, ia, ib, dst = op[0, 0], op[0, 1], op[0, 2], op[0, 3]
+        a = pl.load(out_ref, (pl.dslice(0, 1), pl.dslice(ia, 1), slice(None)))
+        b = pl.load(out_ref, (pl.dslice(0, 1), pl.dslice(ib, 1), slice(None)))
         nor = ~(a | b)
         res = jnp.where(
             code == 0, ~jnp.zeros_like(a),
@@ -46,7 +46,8 @@ def _kernel(mc_ref, state_ref, out_ref):
                                 jnp.where(code == 3, a | b,
                                           jnp.where(code == 4, ~(a & b),
                                                     a & b)))))
-        pl.store(out_ref, (0, pl.dslice(dst, 1), slice(None)), res)
+        pl.store(out_ref, (pl.dslice(0, 1), pl.dslice(dst, 1), slice(None)),
+                 res)
         return ()
 
     jax.lax.fori_loop(0, n_ops, body, ())

@@ -11,9 +11,11 @@ compiled HLO (op counts + modeled wire bytes) — the inputs to §Roofline.
 """
 import os
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
+from repro.xla_flags import ensure_host_device_count
+
+# Respect an existing device-count override (the test suite forces 8 via
+# conftest.py before jax initializes); only the standalone CLI wants 512.
+ensure_host_device_count(512)
 
 import argparse
 import json

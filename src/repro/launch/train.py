@@ -11,6 +11,7 @@ devices are alive); single-device runs skip mesh machinery entirely.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import json
 import os
@@ -26,7 +27,8 @@ from repro.data.pipeline import AudioStub, SyntheticLM, VisionStub
 from repro.dist import context as dctx
 from repro.models import model_lib as M
 from repro.optim.adamw import AdamWConfig, apply_updates, init_state
-from repro.runtime.fault_tolerance import CheckpointManager, StragglerMonitor
+from repro.runtime.fault_tolerance import (CheckpointManager, ElasticMesh,
+                                           StragglerMonitor)
 
 PRESETS = {
     # (d_model, n_layers_mult, heads, kv, d_ff) scaled same-family configs
@@ -76,7 +78,18 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="tensor-parallel degree on multi-device runs "
+                         "(degraded automatically if devices don't divide)")
     args = ap.parse_args()
+
+    # Single-device runs skip mesh machinery entirely; multi-device runs get
+    # the largest valid (pod, data, model) mesh from whatever is alive.
+    mesh_ctx = contextlib.nullcontext()
+    if jax.device_count() > 1:
+        mesh = ElasticMesh(model_parallel=args.model_parallel).make()
+        print(f"[mesh] {dict(mesh.shape)} over {mesh.size} devices")
+        mesh_ctx = dctx.use_mesh(mesh)
 
     cfg = build_cfg(args)
     ocfg = AdamWConfig(lr_peak=args.lr, warmup_steps=max(args.steps // 20, 5),
@@ -111,38 +124,47 @@ def main():
     monitor = StragglerMonitor()
     losses = []
     metrics_f = open(args.metrics_out, "a") if args.metrics_out else None
-    for step in range(start_step, args.steps):
-        if args.fail_at_step is not None and step == args.fail_at_step:
-            raise RuntimeError(f"injected failure at step {step}")
-        t0 = time.time()
-        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
-        if audio:
-            batch["frames"] = jnp.asarray(audio.batch_at(step, args.batch))
-        if vision:
-            batch["patches"] = jnp.asarray(vision.batch_at(step, args.batch))
-        params, opt_state, loss, metrics = train_step(params, opt_state, batch)
-        loss = float(loss)
-        losses.append(loss)
-        dt = time.time() - t0
-        slow = monitor.record(dt)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            print(f"step {step:5d} loss {loss:.4f} "
-                  f"lr {float(metrics['lr']):.2e} "
-                  f"gnorm {float(metrics['grad_norm']):.2f} {dt*1e3:.0f}ms"
-                  + (" [straggler]" if slow else ""))
-        if metrics_f:
-            metrics_f.write(json.dumps({"step": step, "loss": loss,
-                                        "dt_s": dt}) + "\n")
-        if manager:
-            manager.maybe_save(step + 1, {"p": params, "o": opt_state},
-                               metadata={"arch": cfg.name, "seq": args.seq,
-                                         "batch": args.batch})
+    # The active mesh is read at trace time, so the whole stepping loop sits
+    # inside the context; the in-model sharding constraints do the rest.
+    with mesh_ctx:
+        for step in range(start_step, args.steps):
+            if args.fail_at_step is not None and step == args.fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+            if audio:
+                batch["frames"] = jnp.asarray(audio.batch_at(step, args.batch))
+            if vision:
+                batch["patches"] = jnp.asarray(
+                    vision.batch_at(step, args.batch))
+            params, opt_state, loss, metrics = train_step(params, opt_state,
+                                                          batch)
+            loss = float(loss)
+            losses.append(loss)
+            dt = time.time() - t0
+            slow = monitor.record(dt)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.2f} {dt*1e3:.0f}ms"
+                      + (" [straggler]" if slow else ""))
+            if metrics_f:
+                metrics_f.write(json.dumps({"step": step, "loss": loss,
+                                            "dt_s": dt}) + "\n")
+            if manager:
+                manager.maybe_save(step + 1, {"p": params, "o": opt_state},
+                                   metadata={"arch": cfg.name,
+                                             "seq": args.seq,
+                                             "batch": args.batch})
     if manager:
         manager.save(args.steps, {"p": params, "o": opt_state},
                      metadata={"arch": cfg.name, "final": True})
     if metrics_f:
         metrics_f.close()
-    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    if losses:
+        print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    else:  # --resume on an already-finished run: nothing left to step
+        print(f"nothing to do: resumed at step {start_step} of {args.steps}")
     return losses
 
 

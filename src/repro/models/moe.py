@@ -33,6 +33,12 @@ try:  # jax>=0.6 moved shard_map to jax.shard_map
 except Exception:  # pragma: no cover
     from jax.experimental.shard_map import shard_map  # type: ignore
 
+import inspect
+
+# jax < 0.6 calls the replication-check knob check_rep; newer jax check_vma
+_SM_CHECK_KW = ("check_vma" if "check_vma"
+                in inspect.signature(shard_map).parameters else "check_rep")
+
 
 def _local_moe(x, top_ids, top_w, w1, w2, w3, *, n_experts_global: int,
                e_base: int, capacity: int, act_name: str):
@@ -84,7 +90,12 @@ def moe_ffn(x, params: Dict, cfg) -> jnp.ndarray:
         return min(t_tokens,
                    max(int(-(-t_tokens * k * cfg.capacity_factor // e)), 8))
 
-    if mesh is None or "model" not in mesh.axis_names:
+    tp_ax = dctx.mesh_axes(mesh)[1] if mesh is not None else None
+    # ZeRO-3 expert weights keep the shard_map path relevant even at
+    # model=1: the weights stay 'data'-sharded and gather on use.
+    zero3 = (mesh is not None and cfg.moe_fsdp_gather
+             and "data" in mesh.axis_names and mesh.shape["data"] > 1)
+    if mesh is None or tp_ax is None or (mesh.shape[tp_ax] == 1 and not zero3):
         cap = _cap(b * s)
         out = _local_moe(xf, top_ids, top_w, params["w1"], params["w2"],
                          params.get("w3"), n_experts_global=e, e_base=0,
@@ -106,8 +117,7 @@ def moe_ffn(x, params: Dict, cfg) -> jnp.ndarray:
     # ZeRO-3 expert weights: keep them 'data'-sharded inside the shard_map
     # and all_gather on use — the gather's transpose is a reduce-scatter of
     # the expert grads (vs a full all-reduce when experts enter replicated).
-    fsdp_gather = cfg.moe_fsdp_gather and "data" in mesh.axis_names \
-        and mesh.shape["data"] > 1
+    fsdp_gather = zero3
 
     def ranked(xl, idl, wl, w1, w2, w3):
         rank = jax.lax.axis_index(tp)
@@ -132,6 +142,6 @@ def moe_ffn(x, params: Dict, cfg) -> jnp.ndarray:
         in_specs=(P(dp, None), P(dp, None), P(dp, None),
                   w13_spec, w2_spec, w13_spec),
         out_specs=P(dp, None),
-        check_vma=False,
+        **{_SM_CHECK_KW: False},
     )(xf, top_ids, top_w, params["w1"], params["w2"], params["w3"])
     return out.astype(x.dtype).reshape(b, s, d)

@@ -102,7 +102,6 @@ class ElasticMesh:
         dp_total = n // tp
         pods = self.pods if dp_total % self.pods == 0 else 1
         data = dp_total // pods
-        mesh_devices = jax.numpy.array([d.id for d in devices[:pods * data * tp]])
         import numpy as np
 
         dev_arr = np.array(devices[:pods * data * tp]).reshape(pods, data, tp)

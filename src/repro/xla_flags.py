@@ -1,0 +1,24 @@
+"""Pre-jax-import XLA flag plumbing (import must never initialize jax).
+
+The test suite (tests/conftest.py) forces 8 host CPU devices; the
+standalone dry-run CLI forces 512.  Both go through this helper so the
+"first writer wins" handshake lives in exactly one place.
+"""
+from __future__ import annotations
+
+import os
+
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+__all__ = ["ensure_host_device_count"]
+
+
+def ensure_host_device_count(n: int) -> bool:
+    """Prepend ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS
+    unless a device count is already forced (the earlier writer wins).
+    Only effective before jax initializes.  Returns True if it wrote."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _COUNT_FLAG in flags:
+        return False
+    os.environ["XLA_FLAGS"] = f"{_COUNT_FLAG}={n} {flags}"
+    return True

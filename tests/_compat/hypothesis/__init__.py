@@ -1,0 +1,112 @@
+"""Minimal stand-in for the ``hypothesis`` API used by this test suite.
+
+The real hypothesis package is preferred and used whenever it is
+importable; ``conftest.py`` only puts this shim on ``sys.path`` when it is
+missing (the pinned CI image installs the real one).  The shim replays a
+deterministic stream of pseudo-random examples per test — no shrinking, no
+database, no health checks — which keeps the property tests meaningful as
+regression tests in a dependency-free environment.
+
+Supported surface: ``given`` (keyword strategies), ``settings(max_examples,
+deadline)``, ``assume``, and the strategies in ``hypothesis.strategies``
+(``integers``, ``booleans``, ``floats``, ``sampled_from``, ``just``,
+``tuples``, ``lists``, ``one_of``, plus ``.map``/``.filter``).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+from . import strategies
+from .strategies import SearchStrategy, Unsatisfiable
+
+__all__ = ["given", "settings", "assume", "strategies", "HealthCheck"]
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Assumption(Exception):
+    """Raised by ``assume(False)``: the example is discarded, not failed."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+class HealthCheck:
+    """Accepted and ignored (``suppress_health_check=`` compatibility)."""
+
+    all = classmethod(lambda cls: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def settings(*args, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator recording ``max_examples``; every other knob is a no-op.
+
+    Mirrors hypothesis in accepting either order relative to ``@given``.
+    """
+
+    def apply(fn):
+        fn._hyp_settings = {"max_examples": max_examples}
+        return fn
+
+    if args and callable(args[0]):  # bare @settings
+        return apply(args[0])
+    return apply
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise TypeError("the hypothesis shim supports keyword strategies "
+                        "only, e.g. @given(x=st.integers(0, 9))")
+    for name, s in kw_strategies.items():
+        if not isinstance(s, SearchStrategy):
+            raise TypeError(f"strategy for {name!r} is not a SearchStrategy")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = (getattr(wrapper, "_hyp_settings", None)
+                   or getattr(fn, "_hyp_settings", None)
+                   or {"max_examples": _DEFAULT_MAX_EXAMPLES})
+            # Stable per-test stream: same examples on every run / machine.
+            seed0 = zlib.crc32(fn.__qualname__.encode())
+            ran = 0
+            attempts = 0
+            limit = cfg["max_examples"]
+            while ran < limit and attempts < limit * 20:
+                rnd = random.Random(seed0 * 1_000_003 + attempts)
+                attempts += 1
+                try:
+                    drawn = {k: s.do_draw(rnd)
+                             for k, s in kw_strategies.items()}
+                except Unsatisfiable:
+                    continue
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except _Assumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__name__}): {drawn!r}"
+                    ) from e
+                ran += 1
+            if ran == 0:
+                raise Unsatisfiable(
+                    f"{fn.__name__}: could not generate any valid example")
+            return None
+
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution (functools.wraps copies the original signature).
+        del wrapper.__wrapped__
+        orig = inspect.signature(fn)
+        wrapper.__signature__ = orig.replace(parameters=[
+            p for name, p in orig.parameters.items()
+            if name not in kw_strategies])
+        return wrapper
+
+    return decorate

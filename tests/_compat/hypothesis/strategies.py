@@ -1,0 +1,103 @@
+"""Deterministic draw-based strategies for the hypothesis shim."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Sequence
+
+__all__ = ["SearchStrategy", "Unsatisfiable", "integers", "booleans",
+           "floats", "sampled_from", "just", "tuples", "lists", "one_of"]
+
+_MAX_FILTER_TRIES = 200
+
+
+class Unsatisfiable(Exception):
+    """A ``.filter`` predicate rejected every candidate."""
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[Any], Any]):
+        self._draw = draw
+
+    def do_draw(self, rnd) -> Any:
+        return self._draw(rnd)
+
+    def map(self, fn) -> "SearchStrategy":
+        return SearchStrategy(lambda rnd: fn(self._draw(rnd)))
+
+    def filter(self, pred) -> "SearchStrategy":
+        def draw(rnd):
+            for _ in range(_MAX_FILTER_TRIES):
+                v = self._draw(rnd)
+                if pred(v):
+                    return v
+            raise Unsatisfiable("filter predicate rejected "
+                                f"{_MAX_FILTER_TRIES} candidates")
+
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    if min_value > max_value:
+        raise ValueError(f"empty integer range [{min_value}, {max_value}]")
+
+    def draw(rnd):
+        # Weight the endpoints: boundary bugs dominate this codebase
+        # (partition 0 / k-1, value 0 / 2^32-1).
+        r = rnd.random()
+        if r < 0.08:
+            return min_value
+        if r < 0.16:
+            return max_value
+        return rnd.randint(min_value, max_value)
+
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.random() < 0.5)
+
+
+def floats(min_value: float = -1e9, max_value: float = 1e9,
+           allow_nan: bool = False, allow_infinity: bool = False,
+           width: int = 64) -> SearchStrategy:
+    def draw(rnd):
+        r = rnd.random()
+        if allow_nan and r < 0.02:
+            return math.nan
+        if allow_infinity and r < 0.04:
+            return math.inf if rnd.random() < 0.5 else -math.inf
+        return rnd.uniform(min_value, max_value)
+
+    return SearchStrategy(draw)
+
+
+def sampled_from(elements: Sequence) -> SearchStrategy:
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(lambda rnd: elements[rnd.randrange(len(elements))])
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: value)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rnd: tuple(s.do_draw(rnd) for s in strategies))
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        return [elements.do_draw(rnd) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    if not strategies:
+        raise ValueError("one_of requires at least one strategy")
+    return SearchStrategy(
+        lambda rnd: strategies[rnd.randrange(len(strategies))].do_draw(rnd))

@@ -1,6 +1,41 @@
+"""Test-suite bootstrap.
+
+Runs before any test module, and therefore before jax initializes: forces a
+deterministic 8-device CPU topology so the ``repro.dist`` mesh paths are
+exercised everywhere (a mesh-free run would silently no-op every sharding
+constraint).  ``launch/dryrun.py`` detects the override and keeps it instead
+of forcing its standalone 512-device topology.
+"""
+import importlib.util
 import os
 import sys
 
-# tests must see the real device count (1 CPU); the 512-device trick is
-# exclusively for launch/dryrun.py (see the brief)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.xla_flags import ensure_host_device_count  # noqa: E402
+
+ensure_host_device_count(8)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Property-based tests prefer the real hypothesis; fall back to the bundled
+# deterministic shim when it is not installed (see tests/_compat).
+if importlib.util.find_spec("hypothesis") is None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_compat"))
+
+import pytest  # noqa: E402
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running (hypothesis-heavy) tests; deselect with "
+        "-m 'not slow'")
+
+
+@pytest.fixture(scope="session")
+def small_model_config():
+    """The smallest dense decoder config that exercises the full stack
+    (GQA attention, SwiGLU MLP, scan-over-superblocks, tied embeddings)."""
+    import repro.configs as configs
+
+    return configs.get("qwen1.5-0.5b").smoke()

@@ -36,6 +36,7 @@ def test_split_input_roundtrip_unlimited_only():
     _roundtrip(op, "unlimited", "NOR")
 
 
+@pytest.mark.slow
 @given(
     intra=st.tuples(st.integers(0, 31), st.integers(0, 31),
                     st.integers(0, 31)).filter(
@@ -56,6 +57,7 @@ def test_parallel_periodic_roundtrip(intra, period, start):
         _roundtrip(op, model, "NOR")
 
 
+@pytest.mark.slow
 @given(
     dist=st.integers(1, 7),
     extra=st.integers(1, 8),

@@ -1,0 +1,132 @@
+"""End-to-end sharded dry-run smoke on the forced 8-device CPU mesh.
+
+Exercises the real ``launch/dryrun.py`` lowering path (pspec factories ->
+jit in/out shardings -> compile) and then *runs* the compiled train and
+decode steps with materialized arrays — the CPU-scale version of what the
+512-device dry-run does shape-only."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.dist import context as dctx
+from repro.launch import dryrun
+from repro.launch.mesh import make_host_mesh
+from repro.models import model_lib as M
+from repro.models.config import ShapeSpec
+from repro.optim.adamw import init_state
+
+B, S = 8, 16
+
+
+def _materialize(tree, rng):
+    def leaf(s):
+        if np.issubdtype(s.dtype, np.integer):
+            return jnp.zeros(s.shape, s.dtype)
+        return jnp.asarray(rng.normal(size=s.shape) * 0.02, s.dtype)
+
+    return jax.tree.map(leaf, tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    assert len(jax.devices()) == 8, "conftest must force 8 CPU devices"
+    return make_host_mesh(model=2)  # (data=4, model=2)
+
+
+def test_sharded_train_step_compiles_and_runs(mesh, small_model_config):
+    cfg = small_model_config
+    shape = ShapeSpec("tiny_train", S, B, "train")
+    with dctx.use_mesh(mesh):
+        fn, (pshapes, oshapes, bshapes) = dryrun.lower_cell(
+            cfg, shape, mesh, unroll=False)
+        assert fn.lower(pshapes, oshapes, bshapes).compile() is not None
+
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        opt = init_state(dryrun._opt_cfg(cfg), params)
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, cfg.vocab_size, (B, S + 1))
+        batch = {"tokens": jnp.asarray(toks[:, :S], jnp.int32),
+                 "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+        params2, opt2, loss, gnorm = fn(params, opt, batch)
+
+    assert np.isfinite(float(loss)) and 0.0 < float(loss) < 20.0
+    assert np.isfinite(float(gnorm))
+    # weights actually live sharded: the embed table spans the model axis
+    emb_spec = params2["embed"].sharding.spec
+    assert "model" in jax.tree.leaves(tuple(emb_spec))
+    # step advanced exactly once
+    assert int(opt2["step"]) == 1
+
+
+def test_sharded_train_step_emits_collectives(mesh, small_model_config):
+    """Model-axis sharded weights must cost at least one all-reduce/gather;
+    also covers dryrun.parse_collectives on real compiled HLO."""
+    cfg = small_model_config
+    shape = ShapeSpec("tiny_train", S, B, "train")
+    with dctx.use_mesh(mesh):
+        fn, args = dryrun.lower_cell(cfg, shape, mesh, unroll=False)
+        compiled = fn.lower(*args).compile()
+    colls = dryrun.parse_collectives(compiled.as_text())
+    assert isinstance(colls, dict) and colls, "expected collectives in HLO"
+    assert all(c["count"] > 0 and c["wire_bytes"] >= 0.0
+               for c in colls.values())
+
+
+def test_sharded_decode_step_compiles_and_runs(mesh, small_model_config):
+    cfg = small_model_config
+    shape = ShapeSpec("tiny_decode", 32, B, "decode")
+    with dctx.use_mesh(mesh):
+        fn, (pshapes, tok_s, pos_s, cshapes) = dryrun.lower_cell(
+            cfg, shape, mesh, unroll=False)
+        assert fn.lower(pshapes, tok_s, pos_s, cshapes).compile() is not None
+
+        params = M.init_params(cfg, jax.random.PRNGKey(1))
+        rng = np.random.default_rng(1)
+        caches = _materialize(cshapes, rng)
+        tok = jnp.ones((B, 1), jnp.int32)
+        nxt, logits, caches2 = fn(params, tok, jnp.int32(0), caches)
+
+    assert nxt.shape == (B, 1)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert jax.tree.structure(caches2) == jax.tree.structure(cshapes)
+
+
+def test_sharded_moe_forward_runs_shard_map_path(mesh):
+    """The expert-parallel shard_map path (experts over "model", tokens over
+    "data") must produce the same loss as the single-device gather path."""
+    cfg = configs.get("granite-moe-1b-a400m").smoke().scaled(
+        capacity_factor=16.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, cfg.vocab_size, (B, S + 1))
+    batch = {"tokens": jnp.asarray(toks[:, :S], jnp.int32),
+             "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+    want = float(jax.jit(lambda p, b: M.loss_fn(p, b, cfg))(params, batch))
+    with dctx.use_mesh(mesh):
+        fn = jax.jit(lambda p, b: M.loss_fn(p, b, cfg))
+        # Pin the path: the expert psum over "model" must show up as a
+        # collective in the HLO (a vacuous fall-through to the local MoE
+        # branch would compile collective-free for this isolated loss).
+        from repro.models.moe import moe_ffn
+
+        blk = jax.tree.map(lambda a: a[0], params["blocks"]["0"])
+        x = jnp.asarray(np.zeros((B, S, cfg.d_model)), jnp.float32)
+        moe_hlo = jax.jit(lambda x, p: moe_ffn(x, p, cfg)).lower(
+            x, blk).compile().as_text()
+        assert "all-reduce" in moe_hlo, "shard_map expert psum missing"
+        got = float(fn(params, batch))
+    np.testing.assert_allclose(got, want, rtol=2e-3)
+
+
+def test_dp_only_policy_replicates_weights(mesh, small_model_config):
+    cfg = small_model_config
+    shape = ShapeSpec("tiny_train", S, B, "train")
+    with dctx.use_mesh(mesh, dp_axes=("data", "model")):
+        fn, args = dryrun.lower_cell(cfg, shape, mesh, unroll=False,
+                                     policy="dp_only")
+        compiled = fn.lower(*args).compile()
+    assert compiled is not None

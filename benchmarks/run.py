@@ -1,9 +1,12 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is real CPU
-wall time where the benchmark executes something (the simulator throughput
-rows); cycle/bit/area rows are cycle-accurate simulator measurements
-(``derived`` column) with the build time as the timing column.
+Prints ``name,us_per_call,derived`` CSV rows and writes the same rows as
+machine-readable JSON (``BENCH_partitionpim.json``, uploaded as a CI
+artifact) so the perf trajectory is diffable across commits.
+``us_per_call`` is real CPU wall time where the benchmark executes
+something (the simulator throughput rows); cycle/bit/area rows are
+cycle-accurate simulator measurements (``derived`` column) with the build
+time as the timing column.
 
 Paper anchors:
   fig6a_latency   — §5.1: 32-bit multiplication latency per model
@@ -17,6 +20,9 @@ Paper anchors:
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 from typing import List, Tuple
 
@@ -160,6 +166,22 @@ def dot_accumulate() -> List[Row]:
     return rows
 
 
+def engine_compile_cache() -> List[Row]:
+    """Compile-once/execute-many: cold build vs engine cache hit."""
+    from repro.pim import engine
+
+    engine.clear_cache()
+    us_cold, art = _timed(lambda: engine.compile_dot(8, 8, model="minimal"))
+    us_hit, art2 = _timed(lambda: engine.compile_dot(8, 8, model="minimal"))
+    assert art is art2, "cache hit must return the same artifact"
+    return [
+        ("engine/compile_dot_cold", us_cold,
+         f"{art.microcode.shape[0]} microcode rows"),
+        ("engine/compile_dot_hit", us_hit,
+         f"{us_cold / max(us_hit, 0.1):.0f}x faster than cold build"),
+    ]
+
+
 def pim_lm_gemm() -> List[Row]:
     """PIM cost model over the assigned archs' core GEMM (one FFN layer)."""
     import repro.configs as configs
@@ -189,14 +211,30 @@ def pim_lm_gemm() -> List[Row]:
 
 
 TABLES = [fig6a_latency, fig6b_control, fig6c_area, energy, bounds,
-          sim_throughput, dot_accumulate, pim_lm_gemm]
+          sim_throughput, dot_accumulate, engine_compile_cache, pim_lm_gemm]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-out", default="",
+                    help="machine-readable results path (e.g. "
+                         "BENCH_partitionpim.json, as CI passes); empty "
+                         "keeps local runs side-effect-free")
+    args = ap.parse_args(argv)
+
+    results = {}
     print("name,us_per_call,derived")
     for table in TABLES:
         for name, us, derived in table():
             print(f"{name},{us:.1f},{derived}")
+            results[name] = {"us_per_call": round(us, 1), "derived": derived}
+    if args.json_out:
+        tmp = args.json_out + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, args.json_out)
+        print(f"# wrote {len(results)} entries to {args.json_out}")
 
 
 if __name__ == "__main__":

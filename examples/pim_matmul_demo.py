@@ -1,14 +1,16 @@
 """PIM GEMM demo: integer matrix multiply executed gate-by-gate on the
-simulated memristive crossbars (carry-save accumulation), plus the same
-matmul through the Pallas TPU kernel path and through a neural layer.
+simulated memristive crossbars (carry-save accumulation), through the
+compile-once/execute-many ``repro.pim.engine`` API — plus the same matmul
+through the Pallas TPU kernel path and through a neural layer under the
+engine's mode selection.
 
 Run:  PYTHONPATH=src python examples/pim_matmul_demo.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.pim.matmul import build_dot, pim_matmul_int
-from repro.kernels.crossbar_exec import crossbar_exec
+from repro.pim import engine
+from repro.pim.matmul import pim_matmul_int
 from repro.kernels.quant_matmul import quant_linear
 from repro.pim import executor as ex
 
@@ -21,20 +23,27 @@ w = rng.integers(0, 256, size=(O, K), dtype=np.uint64)
 y = pim_matmul_int(x, w, n_bits=8, model="minimal", rows_per_crossbar=32)
 print("pim_matmul_int exact:",
       np.array_equal(y.astype(object), x.astype(object) @ w.T.astype(object)))
+# the wrapper compiled through the engine cache: same shape -> same artifact
+print("compile cache:", engine.cache_info())
 
-# -- 2) the same program through the Pallas kernel (interpret mode on CPU) --
-dot = build_dot(K, 8, model="minimal")
+# -- 2) the same artifact through the Pallas kernel (interpret mode on CPU) --
+dot = engine.compile_dot(K, 8, model="minimal")   # cache hit, no rebuild
 st = dot.program.stats()
 print(f"dot program: {st.cycles} cycles, {st.logic_gates} gates, "
       f"{st.control_bits_per_message} control bits/cycle")
+y_pallas = engine.execute(dot, x, w, backend="pallas", rows_per_crossbar=32)
+print("pallas kernel matmul exact:", np.array_equal(
+    y_pallas.astype(object), x.astype(object) @ w.T.astype(object)))
+
+# the raw state path is still available for custom drivers:
 rows = 32
-state = ex.blank_state(1, dot.program.cfg.n, rows)
+state = ex.blank_state(1, dot.n_cols, rows)
 for i in range(K):
     state = ex.write_numbers(state, dot.x_cols[i],
                              np.tile(x[:1, i], (1, rows)))
     state = ex.write_numbers(state, dot.w_cols[i],
                              np.tile(w[:1, i], (1, rows)))
-out = crossbar_exec(jnp.array(state), jnp.asarray(dot.program.to_microcode()))
+out = engine.execute_state(jnp.array(state), dot.microcode, backend="pallas")
 acc = ex.read_numbers(out, dot.acc_cols, rows)
 want = int(sum(int(a) * int(b) for a, b in zip(x[0], w[0])))
 print("pallas kernel dot exact:", bool((acc == want).all()))
@@ -46,3 +55,11 @@ yq = quant_linear(xf, wf, backend="pallas")
 rel = float(np.abs(np.asarray(yq) - np.asarray(xf) @ np.asarray(wf)).max()
             / np.abs(np.asarray(xf) @ np.asarray(wf)).max())
 print(f"quantized PIM-style linear rel-err: {rel:.3%} (int8 fixed point)")
+
+# -- 4) the same layer through models.layers.linear under mode selection -----
+from repro.models.layers import linear  # noqa: E402
+
+with engine.mode("quant"):
+    yq2 = linear(xf, wf)
+print("engine.mode('quant') matches direct kernel call:",
+      bool(np.allclose(np.asarray(yq2), np.asarray(yq))))

@@ -9,6 +9,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 
 from repro.core import PartitionConfig, message_bits
+from repro.pim import engine
 from repro.pim import executor as ex
 from repro.pim.mult_serial import build_serial_multiplier
 from repro.pim.multpim import build_multpim
@@ -35,6 +36,8 @@ minimal.program.check_messages(sample_every=50)
 print("control codec: every sampled message encodes/decodes correctly")
 
 # -- run it: 1024 rows multiply concurrently --------------------------------
+# (execution goes through the repro.pim.engine backend registry; swap
+# backend="pallas" for the TPU kernel path)
 rows = 1024
 rng = np.random.default_rng(0)
 a = rng.integers(0, 1 << 32, size=(1, rows), dtype=np.uint64)
@@ -42,7 +45,8 @@ b = rng.integers(0, 1 << 32, size=(1, rows), dtype=np.uint64)
 state = ex.blank_state(1, cfg.n, rows)
 state = ex.write_numbers(state, minimal.a_cols, a)
 state = ex.write_numbers(state, minimal.b_cols, b)
-state = ex.execute(state, minimal.program.to_microcode())
+state = engine.execute_state(state, minimal.program.to_microcode(),
+                             backend="scan")
 got = ex.read_numbers(state, minimal.result_cols, rows)
 ok = np.array_equal(got.astype(object), a.astype(object) * b.astype(object))
 print(f"simulated crossbar multiplied {rows} row-pairs bit-exactly: {ok}")

@@ -151,9 +151,18 @@ class Program:
 class ProgramBuilder:
     """Convenience builder used by the arithmetic algorithms.
 
-    ``try_op`` appends a fused operation if it is legal under the program's
-    model and otherwise appends the provided legal fallback decomposition —
-    the mechanism the paper uses to adapt MultPIM to standard/minimal (§5).
+    This is the ONE program-construction API: ``pim/matmul.py``,
+    ``pim/multpim.py`` and ``pim/mult_serial.py`` all emit operations
+    through it (they used to carry private ``_B`` clones).  Three layers of
+    helpers:
+
+    * raw:        ``emit`` (append a pre-built Operation);
+    * gate-level: ``gate`` (one serial gate), ``par`` (one fused parallel
+      operation), ``init_range`` / ``init_periodic`` (SET windows);
+    * model-aware: ``try_op`` / ``fuse_or`` append a fused operation if it
+      is legal under the program's model and otherwise the provided legal
+      fallback decomposition — the mechanism the paper uses to adapt
+      MultPIM to standard/minimal (§5).
     """
 
     def __init__(self, cfg: PartitionConfig, model: str, name: str = ""):
@@ -161,11 +170,50 @@ class ProgramBuilder:
         self.cfg = cfg
         self.model = model
 
+    # -- raw ----------------------------------------------------------------
+
+    def emit(self, op: Operation) -> None:
+        self.program.append(op)
+
+    # -- gate level ---------------------------------------------------------
+
     def op(self, *gates: GateOp, label: str = "") -> None:
         self.program.append(Operation(gates=tuple(gates), label=label))
 
     def init(self, init_op: InitOp, label: str = "") -> None:
         self.program.append(Operation(init=init_op, label=label))
+
+    def gate(self, name: str, ins: Iterable[int], out: int,
+             label: str = "") -> None:
+        """One serial gate as its own operation."""
+        self.program.append(
+            Operation(gates=(GateOp(name, tuple(ins), out),), label=label))
+
+    def par(self, gates: Iterable[GateOp], label: str = "") -> None:
+        """One parallel operation of concurrent gates."""
+        self.program.append(Operation(gates=tuple(gates), label=label))
+
+    def init_range(self, lo: int, hi: int, label: str = "") -> None:
+        """SET the contiguous column range ``[lo, hi]``."""
+        self.program.append(Operation(init=InitOp("range", lo, hi),
+                                      label=label))
+
+    def init_periodic(self, ilo: int, ihi: int, p_start: int = 0,
+                      p_end: Optional[int] = None, period: int = 1,
+                      label: str = "") -> None:
+        """SET intra range ``[ilo, ihi]`` in partitions ``p_start..p_end``
+        (default: all) with the given period."""
+        p_end = self.cfg.k - 1 if p_end is None else p_end
+        self.program.append(Operation(
+            init=InitOp("periodic", ilo, ihi, p_start, p_end, period),
+            label=label))
+
+    # -- model-aware --------------------------------------------------------
+
+    def fuse_or(self, fused: Operation, fallback: Iterable[Operation],
+                label: str = "") -> bool:
+        """Append ``fused`` if legal under the model, else ``fallback``."""
+        return self.try_op((fused,), fallback, label=label)
 
     def try_op(
         self,

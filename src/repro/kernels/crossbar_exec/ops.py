@@ -13,12 +13,13 @@ def run_program(state: jnp.ndarray, microcode, backend: str = "jnp",
                 w_tile: int = 128) -> jnp.ndarray:
     """Execute a Program's microcode on crossbar state.
 
-    backend: "jnp" (lax.scan oracle) or "pallas" (interpret-mode TPU kernel
-    on CPU; compiled VMEM-tiled kernel on real TPU).
+    Thin shim over the ``repro.pim.engine`` backend registry — ``"jnp"``
+    (alias ``"scan"``, the lax.scan oracle), ``"unrolled"`` (static-index
+    variant), or ``"pallas"`` (interpret-mode TPU kernel on CPU; compiled
+    VMEM-tiled kernel on real TPU); ``engine.register_backend`` extends the
+    set without touching call sites.
     """
-    mc = jnp.asarray(microcode, jnp.int32)
-    if backend == "jnp":
-        return crossbar_exec_ref(state, mc)
-    if backend == "pallas":
-        return crossbar_exec(state, mc, w_tile=w_tile)
-    raise ValueError(f"unknown backend {backend!r}")
+    from repro.pim import engine
+
+    return engine.execute_state(state, microcode, backend=backend,
+                                w_tile=w_tile)

@@ -1,21 +1,28 @@
 """Batched serving driver: prefill a prompt batch, decode greedily.
 
-CPU-runnable with ``--smoke``/``--preset``; on real hardware the same
-entry point shards over the production mesh (params/caches take the same
-partitioning rules as the dry-run).
+CPU-runnable with ``--smoke``/``--preset``.  On multi-device runs the
+driver enters the ``ElasticMesh`` (same policy as ``launch/train.py``),
+batches requests over the "data" axis, and keeps the decode caches sharded
+with ``dist.cache_pspecs`` — batch over the data-parallel axes, attention
+heads over "model" — so steady-state decode never gathers the caches to
+one device.  ``--pim-mode`` threads a ``repro.pim.engine`` lowering mode
+through the config (e.g. ``quant`` for the int8 Pallas path).
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-import repro.configs as configs
+from repro.dist import context as dctx
+from repro.dist import partitioning as dpart
 from repro.launch.train import PRESETS, build_cfg
 from repro.models import model_lib as M
+from repro.runtime.fault_tolerance import ElasticMesh
 
 
 def main():
@@ -28,9 +35,21 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pim-mode", choices=["xla", "quant", "pim_sim"],
+                    default=None)
+    ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args()
 
+    mesh = None
+    mesh_ctx = contextlib.nullcontext()
+    if jax.device_count() > 1:
+        mesh = ElasticMesh(model_parallel=args.model_parallel).make()
+        print(f"[mesh] {dict(mesh.shape)} over {mesh.size} devices")
+        mesh_ctx = dctx.use_mesh(mesh)
+
     cfg = build_cfg(args)
+    if args.pim_mode:
+        cfg = cfg.scaled(pim_mode=args.pim_mode)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
     batch = {"tokens": jnp.asarray(
@@ -44,23 +63,35 @@ def main():
         batch["patches"] = jnp.asarray(rng.normal(size=(
             args.batch, cfg.n_patches, cfg.vision_dim)), jnp.float32)
 
-    prefill = jax.jit(lambda p, b: M.prefill(p, b, cfg))
-    decode = jax.jit(lambda p, t, pos, c: M.decode_step(p, t, pos, c, cfg))
+    with mesh_ctx:
+        if mesh is not None:
+            # requests ride the "data" axis; the in-model constraints keep
+            # activations there through the stack
+            batch = jax.device_put(batch, dpart.tree_shardings(
+                dpart.batch_pspecs(batch, mesh), mesh))
+        prefill = jax.jit(lambda p, b: M.prefill(p, b, cfg))
+        decode = jax.jit(lambda p, t, pos, c: M.decode_step(p, t, pos, c,
+                                                            cfg))
 
-    t0 = time.time()
-    logits, caches = prefill(params, batch)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        t0 = time.time()
+        logits, caches = prefill(params, batch)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+        if mesh is not None:
+            # pin the decode caches (batch over DP axes, heads over
+            # "model") so every decode step reads/writes them in place
+            caches = jax.device_put(caches, dpart.tree_shardings(
+                dpart.cache_pspecs(caches, mesh), mesh))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
 
-    generated = [np.asarray(tok)]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        tok, _, caches = decode(params, tok,
-                                jnp.int32(args.prompt_len + i), caches)
-        generated.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+        generated = [np.asarray(tok)]
+        t0 = time.time()
+        for i in range(args.gen - 1):
+            tok, _, caches = decode(params, tok,
+                                    jnp.int32(args.prompt_len + i), caches)
+            generated.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
 
     out = np.concatenate(generated, axis=1)
     toks_per_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)

@@ -81,6 +81,10 @@ def main():
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="tensor-parallel degree on multi-device runs "
                          "(degraded automatically if devices don't divide)")
+    ap.add_argument("--pim-mode", choices=["xla", "quant", "pim_sim"],
+                    default=None,
+                    help="repro.pim.engine lowering for every linear "
+                         "(threaded through ModelConfig.pim_mode)")
     args = ap.parse_args()
 
     # Single-device runs skip mesh machinery entirely; multi-device runs get
@@ -92,6 +96,8 @@ def main():
         mesh_ctx = dctx.use_mesh(mesh)
 
     cfg = build_cfg(args)
+    if args.pim_mode:
+        cfg = cfg.scaled(pim_mode=args.pim_mode)
     ocfg = AdamWConfig(lr_peak=args.lr, warmup_steps=max(args.steps // 20, 5),
                        total_steps=args.steps)
     data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)

@@ -92,6 +92,12 @@ class ModelConfig:
                                      # HLO flop accounting, dry-run only)
     kv_cache_dtype: str = "bf16"     # "int8": quantized KV cache
     loss_chunk: int = 8192
+    unembed_chunk: int = 0           # vocab-axis chunk for the loss-path
+                                     # unembed (0: single full-width einsum)
+    # PIM lowering for every linear in the stack: None inherits the ambient
+    # repro.pim.engine.mode(...) context; "xla" | "quant" | "pim_sim" pin it
+    # (MaxText-style quantization-config threading).
+    pim_mode: Optional[str] = None
     # training
     max_seq_len: int = 8_192
 

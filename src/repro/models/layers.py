@@ -5,11 +5,20 @@ Parameters are plain nested dicts of jnp arrays.  Every layer has a
 can be lowered without allocating (the dry-run path), and ``init_*``
 initializers used by the smoke tests / real training.
 
-``PIMLinear`` is the paper integration point: mode "xla" is a plain matmul,
-"quant" routes through the int8 Pallas kernel (fixed-point arithmetic, the
-TPU analogue of the crossbar's integer representation), and "pim_sim"
-executes the actual MultPIM gate programs on the bit-accurate simulator
-(tiny shapes; used in examples/tests).
+:func:`linear` is the paper integration point.  How it lowers is selected
+through ``repro.pim.engine`` — there is no process-wide global:
+
+* ``"xla"``      — plain einsum (default);
+* ``"quant"``    — the int8 Pallas kernel (fixed-point arithmetic, the TPU
+  analogue of the crossbar's integer representation);
+* ``"pim_sim"``  — the actual MultPIM gate programs on the bit-accurate
+  crossbar simulator, via ``engine.sim_linear``'s ``jax.pure_callback``
+  route, so it traces under ``jax.jit`` (tiny shapes; examples/tests).
+
+Selection is either ambient — ``with pim.engine.mode("quant"): ...`` wrapped
+around the *trace* — or threaded explicitly: ``linear(x, w, mode=...)``,
+normally fed from ``ModelConfig.pim_mode`` by the model stack.  An explicit
+mode wins over the ambient context.
 """
 from __future__ import annotations
 
@@ -18,7 +27,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Params = Dict[str, Any]
 
@@ -107,17 +115,22 @@ def apply_rope(x, positions, theta: float):
 # linear / embedding (with PIM modes)
 # --------------------------------------------------------------------------
 
-PIM_MODE: Dict[str, str] = {"mode": "xla"}  # process-wide switch for examples
+def linear(x, w, b=None, *, mode: Optional[str] = None):
+    """``x @ w (+ b)`` lowered per the active PIM mode.
 
+    ``mode=None`` reads the ambient ``pim.engine.mode(...)`` context at
+    trace time; an explicit ``mode`` (e.g. ``ModelConfig.pim_mode`` threaded
+    by the model stack) takes precedence.
+    """
+    from repro.pim import engine
 
-def linear(x, w, b=None):
-    mode = PIM_MODE["mode"]
+    mode = engine.resolve_mode(mode)
     if mode == "quant":
         from repro.kernels.quant_matmul import quant_linear
 
         y = quant_linear(x, w.astype(jnp.float32))
     elif mode == "pim_sim":
-        y = _pim_sim_linear(x, w)
+        y = engine.sim_linear(x, w)
     else:
         y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
     if b is not None:
@@ -125,39 +138,24 @@ def linear(x, w, b=None):
     return y
 
 
-def _pim_sim_linear(x, w, bits: int = 7):
-    """Bit-exact crossbar execution of the matmul (tiny shapes only).
-
-    7-bit symmetric quantization so the offset-shifted unsigned operands fit
-    the 8-bit (power-of-two partition count) MultPIM multiplier.
-    """
-    from repro.pim.matmul import pim_matmul_int
-
-    xf = np.asarray(jax.device_get(x), np.float32)
-    wf = np.asarray(jax.device_get(w), np.float32)
-    lead = xf.shape[:-1]
-    xf = xf.reshape(-1, xf.shape[-1])
-    qmax = 2 ** (bits - 1) - 1
-    xs = np.maximum(np.abs(xf).max(axis=1, keepdims=True), 1e-8) / qmax
-    ws = np.maximum(np.abs(wf).max(axis=0, keepdims=True), 1e-8) / qmax
-    xq = np.clip(np.round(xf / xs), -qmax, qmax).astype(np.int64)
-    wq = np.clip(np.round(wf / ws), -qmax, qmax).astype(np.int64)
-    # crossbars store magnitudes; signs handled by 2's-complement offset:
-    # shift into unsigned, multiply, correct. (offset trick: (a+128)(b+128))
-    off = qmax + 1
-    acc = pim_matmul_int((xq + off).astype(np.uint64), (wq.T + off).astype(np.uint64),
-                         n_bits=bits + 1, model="minimal")
-    acc = acc.astype(np.int64)
-    corr = (off * (wq.sum(axis=0, keepdims=True) + off * xq.shape[1])
-            + off * xq.sum(axis=1, keepdims=True))
-    y = (acc - corr) * (xs * ws)
-    return jnp.asarray(y.reshape(*lead, wf.shape[1]), x.dtype)
-
-
 def embed_lookup(table, ids):
     return jnp.take(table, ids, axis=0)
 
 
 def unembed(x, table, chunk: Optional[int] = None):
-    """Logits = x @ table.T (table: (V, d))."""
-    return jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+    """Logits = x @ table.T (table: (V, d)).
+
+    ``chunk`` bounds the vocab-axis working set: the table is consumed in
+    ``chunk``-row slices, so the compute-dtype upcast of the table (and the
+    einsum intermediate) peaks at ``chunk x d`` instead of ``V x d``.  The
+    loss path threads ``ModelConfig.unembed_chunk`` here.  ``None`` (or a
+    chunk >= V) is the single full-width einsum.
+    """
+    V = table.shape[0]
+    if chunk is None or chunk <= 0 or chunk >= V:
+        return jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+    parts = [
+        jnp.einsum("...d,vd->...v", x, table[v:v + chunk].astype(x.dtype))
+        for v in range(0, V, chunk)
+    ]
+    return jnp.concatenate(parts, axis=-1)

@@ -7,6 +7,7 @@ caches are scanned alongside (prefill emits them, decode threads them).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -457,8 +458,24 @@ def _unembed_table(params, cfg):
     return params.get("lm_head", params["embed"])
 
 
+def _pim_ctx(cfg: ModelConfig):
+    """Thread ``cfg.pim_mode`` into the trace (MaxText-style config
+    threading): every ``linear`` below the entry point resolves against it.
+    ``None`` defers to the caller's ambient ``pim.engine.mode`` context."""
+    if cfg.pim_mode is None:
+        return contextlib.nullcontext()
+    from repro.pim import engine
+
+    return engine.mode(cfg.pim_mode)
+
+
 def loss_fn(params, batch, cfg: ModelConfig):
     """Mean next-token cross entropy (chunked over tokens)."""
+    with _pim_ctx(cfg):
+        return _loss_fn(params, batch, cfg)
+
+
+def _loss_fn(params, batch, cfg: ModelConfig):
     tokens = batch["tokens"]
     labels = batch["labels"]
     x = _embed_in(params, tokens, cfg)
@@ -480,7 +497,8 @@ def loss_fn(params, batch, cfg: ModelConfig):
     def chunk_nll(args):
         xc, yc = args
         xc = dctx.shard(xc, dp, None)
-        logits = unembed(xc, table).astype(jnp.float32)
+        logits = unembed(xc, table,
+                         chunk=cfg.unembed_chunk or None).astype(jnp.float32)
         logits = dctx.shard(logits, dp, dctx.tp_axis())  # tokens x vocab
         m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
         lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[:, 0]
@@ -502,27 +520,30 @@ def loss_fn(params, batch, cfg: ModelConfig):
 
 def prefill(params, batch, cfg: ModelConfig):
     """Forward the prompt; return (last-token logits, caches)."""
-    tokens = batch["tokens"]
-    x = _embed_in(params, tokens, cfg)
-    memory = _memory(params, batch, cfg)
-    positions = jnp.arange(tokens.shape[1])
-    x, caches = _decoder_stack(params, x, cfg, positions=positions,
-                               mode="prefill", memory=memory)
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = unembed(x[:, -1], _unembed_table(params, cfg))
-    return logits.astype(jnp.float32), caches
+    with _pim_ctx(cfg):
+        tokens = batch["tokens"]
+        x = _embed_in(params, tokens, cfg)
+        memory = _memory(params, batch, cfg)
+        positions = jnp.arange(tokens.shape[1])
+        x, caches = _decoder_stack(params, x, cfg, positions=positions,
+                                   mode="prefill", memory=memory)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(x[:, -1], _unembed_table(params, cfg))
+        return logits.astype(jnp.float32), caches
 
 
 def decode_step(params, token, pos, caches, cfg: ModelConfig):
     """One greedy decode step. token: (B, 1) int32; pos: scalar int32."""
-    x = _embed_in(params, token, cfg)
-    positions = jnp.full((1,), pos, jnp.int32)
-    x, new_caches = _decoder_stack(params, x, cfg, positions=positions,
-                                   mode="decode", caches=caches, pos=pos)
-    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = unembed(x[:, -1], _unembed_table(params, cfg)).astype(jnp.float32)
-    next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    return next_tok, logits, new_caches
+    with _pim_ctx(cfg):
+        x = _embed_in(params, token, cfg)
+        positions = jnp.full((1,), pos, jnp.int32)
+        x, new_caches = _decoder_stack(params, x, cfg, positions=positions,
+                                       mode="decode", caches=caches, pos=pos)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(x[:, -1],
+                         _unembed_table(params, cfg)).astype(jnp.float32)
+        next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, logits, new_caches
 
 
 # ==========================================================================

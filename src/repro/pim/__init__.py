@@ -1,11 +1,19 @@
-"""PIM algorithms on the PartitionPIM core: executor, arithmetic, cost model."""
-from repro.pim import executor
+"""PIM algorithms on the PartitionPIM core: executor, arithmetic, engine,
+cost model.
+
+``repro.pim.engine`` is the execution surface: compile-once/execute-many
+artifacts, the backend registry, and the ``mode(...)`` selection that
+``models.layers.linear`` honours.  The other modules are the synthesis
+(program construction) and simulation layers underneath it.
+"""
+from repro.pim import engine, executor
 from repro.pim.mult_serial import SerialMultiplier, build_serial_multiplier
 from repro.pim.multpim import PartitionedMultiplier, build_multpim
 from repro.pim.matmul import PimDot, build_dot, pim_matmul_int
 from repro.pim.cost_model import GemmCost, PimDeviceParams, gemm_cost, mult_cost
 
 __all__ = [
+    "engine",
     "executor",
     "SerialMultiplier",
     "build_serial_multiplier",

@@ -1,0 +1,492 @@
+"""Compile-once / execute-many front-end for the PIM stack.
+
+The paper separates *what* a partitioned crossbar computes (the
+Operation/Program layer) from *how* it is practically driven (periphery,
+control, execution).  This module is the driving side, as one API:
+
+* :func:`compile_dot` / :func:`compile_matmul` — build (once) and cache a
+  :class:`CompiledPim` artifact: the gate program, its flat microcode, and
+  the I/O column layout, keyed on
+  ``(n_terms, n_bits, model, accumulate, n_cols)``.  Repeated calls with
+  the same key return the *same* artifact without rebuilding (program
+  construction is the expensive Python part — thousands of gate appends).
+* :func:`execute` — run an artifact over integer operands on any of the
+  registered simulator backends (``"scan"`` lax.scan oracle, ``"unrolled"``
+  static-index variant, ``"pallas"`` TPU kernel) through one registry
+  instead of scattered imports; :func:`register_backend` adds more.  Note
+  ``"unrolled"`` XLA-compiles one op per microcode row — fast per step but
+  compile time grows with program length, so reserve it for short programs
+  (the benchmark uses it to measure exactly that trade-off).
+* :func:`mode` / :func:`current_mode` — an explicit, exception-safe context
+  manager selecting how ``models.layers.linear`` lowers a matmul
+  (``"xla"`` | ``"quant"`` | ``"pim_sim"``), replacing the old
+  process-wide mutable mode dict.  ``ModelConfig.pim_mode`` threads the same selection
+  through configs (MaxText-style quantization-config threading); an
+  explicit config field wins over the ambient context.
+* :func:`sim_linear` — the bit-accurate crossbar linear, routed through
+  ``jax.pure_callback`` with exact result shapes so it composes with
+  ``jax.jit`` (the old implementation called ``jax.device_get`` on tracers
+  and silently broke under ``jit``/``shard_map``).
+
+Like ``dist.use_mesh``, the ambient mode is read at **trace** time and is
+not part of jax's jit cache key: trace (or re-jit) inside the ``mode``
+block, one jitted callable per mode.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import threading
+from typing import Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MODES",
+    "CompiledPim",
+    "CacheInfo",
+    "compile_dot",
+    "compile_matmul",
+    "cache_info",
+    "clear_cache",
+    "register_backend",
+    "get_backend",
+    "backends",
+    "execute",
+    "execute_state",
+    "matmul_int",
+    "sim_linear",
+    "mode",
+    "current_mode",
+    "resolve_mode",
+]
+
+
+# ==========================================================================
+# execution-mode selection (replaces the old process-wide mode global)
+# ==========================================================================
+
+MODES = ("xla", "quant", "pim_sim")
+_DEFAULT_MODE = "xla"
+
+
+class _ModeStack(threading.local):
+    def __init__(self):
+        self.frames = []
+
+
+_mode_stack = _ModeStack()
+
+
+def _check_mode(name: str) -> str:
+    if name not in MODES:
+        raise ValueError(f"unknown PIM mode {name!r}; expected one of {MODES}")
+    return name
+
+
+@contextlib.contextmanager
+def mode(name: str) -> Iterator[str]:
+    """Select the linear-lowering mode for the enclosed block (re-entrant).
+
+    The prior mode is restored on exit, including on exception.  Thread
+    local, so concurrent traces don't race each other.
+    """
+    _mode_stack.frames.append(_check_mode(name))
+    try:
+        yield name
+    finally:
+        _mode_stack.frames.pop()
+
+
+def current_mode() -> str:
+    """The innermost ``mode(...)`` selection, or ``"xla"`` outside any."""
+    return _mode_stack.frames[-1] if _mode_stack.frames else _DEFAULT_MODE
+
+
+def resolve_mode(override: Optional[str] = None) -> str:
+    """Explicit (config-threaded) mode if given, else the ambient mode."""
+    if override is not None:
+        return _check_mode(override)
+    return current_mode()
+
+
+# ==========================================================================
+# compile cache
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class CompiledPim:
+    """An executable PIM artifact: program + microcode + I/O columns.
+
+    Immutable and shared — every cache hit returns the same object, so
+    treat ``microcode`` as read-only.
+    """
+
+    key: Tuple
+    program: "object"               # repro.core.program.Program
+    microcode: np.ndarray           # (G, 4) int32 flat microcode
+    n_bits: int
+    n_terms: int
+    x_cols: Tuple[Tuple[int, ...], ...]
+    w_cols: Tuple[Tuple[int, ...], ...]
+    acc_cols: Tuple[int, ...]
+
+    @property
+    def n_cols(self) -> int:
+        return self.program.cfg.n
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheInfo:
+    hits: int
+    misses: int
+    builds: int
+    size: int
+
+
+_cache: Dict[Tuple, CompiledPim] = {}
+_cache_lock = threading.Lock()
+_hits = 0
+_misses = 0
+_builds = 0
+
+
+def compile_dot(n_terms: int, n_bits: int = 8, *, model: str = "minimal",
+                accumulate: str = "carry_save", n_cols: int = 1024
+                ) -> CompiledPim:
+    """Compile (or fetch) the single-row dot-product program.
+
+    The artifact computes ``sum_i x_i * w_i`` over ``n_terms`` pairs of
+    ``n_bits``-bit unsigned ints per simulator row.
+    """
+    global _hits, _misses, _builds
+    key = (n_terms, n_bits, model, accumulate, n_cols)
+    with _cache_lock:
+        art = _cache.get(key)
+        if art is not None:
+            _hits += 1
+            return art
+        _misses += 1
+    # build outside the lock: a multi-second build must not stall unrelated
+    # cache hits or other keys' builds.  On a lost race the first insert
+    # wins and the duplicate build is discarded.
+    from repro.pim.matmul import build_dot
+
+    dot = build_dot(n_terms, n_bits, n_cols=n_cols, model=model,
+                    accumulate=accumulate)
+    art = CompiledPim(
+        key=key,
+        program=dot.program,
+        microcode=dot.program.to_microcode(),
+        n_bits=dot.n_bits,
+        n_terms=dot.n_terms,
+        x_cols=dot.x_cols,
+        w_cols=dot.w_cols,
+        acc_cols=dot.acc_cols,
+    )
+    with _cache_lock:
+        existing = _cache.get(key)
+        if existing is not None:
+            return existing
+        _builds += 1
+        _cache[key] = art
+        return art
+
+
+def compile_matmul(n_terms: int, n_bits: int = 8, *, model: str = "minimal",
+                   accumulate: str = "carry_save", n_cols: int = 1024
+                   ) -> CompiledPim:
+    """Compile (or fetch) the artifact driving an integer GEMM.
+
+    A GEMM with inner dimension ``K = n_terms`` runs the dot program on
+    every (m, o) output element concurrently — one simulator row each —
+    so the artifact is exactly the dot artifact; this alias documents the
+    intent at GEMM call sites.
+    """
+    return compile_dot(n_terms, n_bits, model=model, accumulate=accumulate,
+                       n_cols=n_cols)
+
+
+def cache_info() -> CacheInfo:
+    with _cache_lock:
+        return CacheInfo(hits=_hits, misses=_misses, builds=_builds,
+                         size=len(_cache))
+
+
+def clear_cache() -> None:
+    global _hits, _misses, _builds
+    with _cache_lock:
+        _cache.clear()
+        _hits = _misses = _builds = 0
+
+
+# ==========================================================================
+# backend registry
+# ==========================================================================
+
+# A backend maps (state, microcode, **kw) -> new state, where state is the
+# bit-packed (C, n, W) uint32 crossbar tensor and microcode the (G, 4) rows.
+Backend = Callable[..., "object"]
+
+_backends: Dict[str, Backend] = {}
+_backends_lock = threading.Lock()
+
+
+def register_backend(name: str, fn: Backend) -> None:
+    with _backends_lock:
+        _backends[name] = fn
+
+
+_defaults_registered = False
+
+
+def _ensure_default_backends() -> None:
+    global _defaults_registered
+    if _defaults_registered:
+        return
+    from repro.kernels.crossbar_exec.ref import crossbar_exec_ref
+    from repro.pim import executor as ex
+
+    def scan(state, microcode, **kw):
+        # crossbar_exec_ref owns the donate-argnums contract (copies the
+        # caller's state before the donating executor.execute)
+        return crossbar_exec_ref(state, microcode)
+
+    def unrolled(state, microcode, **kw):
+        return ex.execute_unrolled(state, np.asarray(microcode))
+
+    def pallas(state, microcode, **kw):
+        from repro.kernels.crossbar_exec.crossbar_exec import crossbar_exec
+
+        return crossbar_exec(state, jnp.asarray(microcode, jnp.int32),
+                             w_tile=kw.get("w_tile", 128))
+
+    with _backends_lock:
+        _backends.setdefault("scan", scan)
+        _backends.setdefault("jnp", scan)          # historical alias
+        _backends.setdefault("unrolled", unrolled)
+        _backends.setdefault("pallas", pallas)
+        _backends.setdefault("numpy", _numpy_interpret)
+        # only after everything registered: a failed import above leaves the
+        # flag unset so the next call retries, and a concurrent caller never
+        # observes the flag without the backends
+        _defaults_registered = True
+
+
+def _numpy_interpret(state, microcode, **kw):
+    """Pure-numpy microcode interpreter (no jax anywhere).
+
+    The only backend safe to run *inside* a ``jax.pure_callback`` — jax
+    does not support re-entering jax (even jitted eager calls) from a host
+    callback, so :func:`sim_linear` routes here.  Semantics match
+    ``executor.execute`` bit for bit; gate codes follow ``GATE_CODES``.
+    """
+    st = np.array(state, dtype=np.uint32, copy=True)
+    ones = np.uint32(0xFFFFFFFF)
+    for code, ia, ib, out in np.asarray(microcode).tolist():
+        a = st[:, ia, :]
+        b = st[:, ib, :]
+        if code == 0:                       # INIT
+            res = np.full_like(a, ones)
+        elif code == 1:                     # NOT
+            res = ~a
+        elif code == 2:                     # NOR
+            res = ~(a | b)
+        elif code == 3:                     # OR
+            res = a | b
+        elif code == 4:                     # NAND
+            res = ~(a & b)
+        else:                               # AND
+            res = a & b
+        st[:, out, :] = res
+    return st
+
+
+def get_backend(name: str) -> Backend:
+    _ensure_default_backends()
+    with _backends_lock:
+        fn = _backends.get(name)
+    if fn is None:
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"registered: {sorted(_backends)}")
+    return fn
+
+
+def backends() -> Tuple[str, ...]:
+    _ensure_default_backends()
+    with _backends_lock:
+        return tuple(sorted(_backends))
+
+
+def execute_state(state, microcode, *, backend: str = "scan", **kw):
+    """Run flat microcode over raw crossbar state on the chosen backend."""
+    return get_backend(backend)(state, microcode, **kw)
+
+
+# ==========================================================================
+# execution front-end
+# ==========================================================================
+
+def execute(artifact: CompiledPim, x: np.ndarray, w: np.ndarray, *,
+            backend: str = "scan", rows_per_crossbar: int = 256,
+            **backend_kw) -> np.ndarray:
+    """Integer GEMM through a compiled artifact: (M, K) x (O, K) -> (M, O).
+
+    Each (m, o) output is one simulator row running ``artifact``'s dot
+    program; the (m, o) grid is packed 32 rows/word and split across
+    crossbars (the paper's rows x crossbars way-parallelism).  Exact for
+    unsigned operands up to ``artifact.n_bits`` bits; returns uint64.
+    """
+    from repro.pim import executor as ex
+
+    x = np.asarray(x)
+    w = np.asarray(w)
+    M, K = x.shape
+    O, K2 = w.shape
+    if K != K2:
+        raise ValueError(f"inner dims disagree: x {x.shape} vs w {w.shape}")
+    if K != artifact.n_terms:
+        raise ValueError(
+            f"artifact compiled for {artifact.n_terms} terms, got K={K}")
+
+    total = M * O
+    xs = np.repeat(x, O, axis=0)      # (M*O, K)
+    ws = np.tile(w, (M, 1))           # (M*O, K)
+    n_cb = (total + rows_per_crossbar - 1) // rows_per_crossbar
+    pad = n_cb * rows_per_crossbar - total
+    if pad:
+        xs = np.pad(xs, ((0, pad), (0, 0)))
+        ws = np.pad(ws, ((0, pad), (0, 0)))
+    xs = xs.reshape(n_cb, rows_per_crossbar, K)
+    ws = ws.reshape(n_cb, rows_per_crossbar, K)
+
+    if backend == "numpy":
+        # keep the whole round trip jax-free (callback-safe, see
+        # _numpy_interpret)
+        w_words = (rows_per_crossbar + 31) // 32
+        state = np.zeros((n_cb, artifact.n_cols, w_words), np.uint32)
+
+        def write(cols, values):
+            values = np.asarray(values, np.uint64)
+            for bit, c in enumerate(cols):
+                state[:, c, :] = ex.pack_rows(
+                    (values >> np.uint64(bit)) & np.uint64(1))
+
+        for i in range(K):
+            write(artifact.x_cols[i], xs[:, :, i])
+            write(artifact.w_cols[i], ws[:, :, i])
+    else:
+        state = ex.blank_state(n_cb, artifact.n_cols, rows_per_crossbar)
+        for i in range(K):
+            state = ex.write_numbers(state, artifact.x_cols[i], xs[:, :, i])
+            state = ex.write_numbers(state, artifact.w_cols[i], ws[:, :, i])
+    state = execute_state(state, artifact.microcode, backend=backend,
+                          **backend_kw)
+    acc = ex.read_numbers(state, artifact.acc_cols, rows_per_crossbar)
+    return acc.reshape(-1)[:total].reshape(M, O)
+
+
+def matmul_int(x: np.ndarray, w: np.ndarray, n_bits: int = 8, *,
+               model: str = "minimal", rows_per_crossbar: int = 256,
+               backend: str = "scan", accumulate: str = "carry_save"
+               ) -> np.ndarray:
+    """Compile-and-execute convenience: bit-exact integer GEMM.
+
+    The compile step is cached — calling twice with the same (K, n_bits,
+    model) builds the gate program exactly once.  Inner dimensions longer
+    than one row's column budget are split into chunked GEMMs (at most two
+    distinct chunk sizes, both cached) whose uint64 partials are summed
+    exactly on the host — so any K works, not just what fits one row.
+    """
+    from repro.pim.matmul import max_dot_terms
+
+    K = x.shape[1]
+    chunk = max_dot_terms(n_bits)
+    if chunk <= 0:
+        raise ValueError(f"n_bits={n_bits} does not fit the crossbar layout")
+
+    def run(xs, ws):
+        artifact = compile_matmul(xs.shape[1], n_bits, model=model,
+                                  accumulate=accumulate)
+        return execute(artifact, xs, ws, backend=backend,
+                       rows_per_crossbar=rows_per_crossbar)
+
+    if K <= chunk:
+        return run(x, w)
+    acc = None
+    for lo in range(0, K, chunk):
+        part = run(x[:, lo:lo + chunk], w[:, lo:lo + chunk])
+        acc = part if acc is None else acc + part
+    return acc
+
+
+# ==========================================================================
+# jit-composable simulator linear
+# ==========================================================================
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _sim_mm(bits: int, model: str, backend: str, x, w):
+    out_shape = x.shape[:-1] + (w.shape[-1],)
+    out_dtype = jnp.result_type(x.dtype)
+    qmax = 2 ** (bits - 1) - 1
+    off = qmax + 1
+
+    def host(xv, wv):
+        xf = np.asarray(xv, np.float32)
+        wf = np.asarray(wv, np.float32)
+        lead = xf.shape[:-1]
+        xf = xf.reshape(-1, xf.shape[-1])
+        xs = np.maximum(np.abs(xf).max(axis=1, keepdims=True), 1e-8) / qmax
+        wsc = np.maximum(np.abs(wf).max(axis=0, keepdims=True), 1e-8) / qmax
+        xq = np.clip(np.round(xf / xs), -qmax, qmax).astype(np.int64)
+        wq = np.clip(np.round(wf / wsc), -qmax, qmax).astype(np.int64)
+        # crossbars store magnitudes; signs handled by 2's-complement
+        # offset: shift into unsigned, multiply, correct ((a+off)(b+off))
+        acc = matmul_int((xq + off).astype(np.uint64),
+                         (wq.T + off).astype(np.uint64),
+                         n_bits=bits + 1, model=model, backend=backend)
+        acc = acc.astype(np.int64)
+        corr = (off * (wq.sum(axis=0, keepdims=True) + off * xq.shape[1])
+                + off * xq.sum(axis=1, keepdims=True))
+        y = (acc - corr) * (xs * wsc)
+        return y.reshape(*lead, wf.shape[1]).astype(out_dtype)
+
+    result = jax.ShapeDtypeStruct(out_shape, out_dtype)
+    return jax.pure_callback(host, result, x, w)
+
+
+def _sim_mm_fwd(bits, model, backend, x, w):
+    return _sim_mm(bits, model, backend, x, w), (x, w)
+
+
+def _sim_mm_bwd(bits, model, backend, res, g):
+    # straight-through estimator: the forward is the quantized crossbar
+    # result, the backward differentiates the ideal float matmul (standard
+    # QAT practice; pure_callback itself defines no JVP/VJP)
+    x, w = res
+    gx = jnp.einsum("...n,kn->...k", g, w.astype(g.dtype)).astype(x.dtype)
+    gw = jnp.einsum("...k,...n->kn", x.astype(g.dtype), g).astype(w.dtype)
+    return gx, gw
+
+
+_sim_mm.defvjp(_sim_mm_fwd, _sim_mm_bwd)
+
+
+def sim_linear(x, w, bits: int = 7, *, model: str = "minimal",
+               backend: str = "numpy"):
+    """Bit-exact crossbar execution of ``x @ w`` (tiny shapes only).
+
+    7-bit symmetric quantization so the offset-shifted unsigned operands
+    fit the 8-bit (power-of-two partition count) MultPIM multiplier.  The
+    simulator runs on the host through ``jax.pure_callback`` with the exact
+    result ``ShapeDtypeStruct``, so the call traces under ``jax.jit`` (and
+    inside ``shard_map``) and the jitted result is bit-identical to eager —
+    both paths execute the same host computation.  Differentiable via a
+    straight-through ``custom_vjp`` (gradient of the ideal matmul), so a
+    ``pim_sim`` model trains.  The host computation defaults to the pure-
+    numpy backend: jax may not be re-entered from inside a host callback.
+    """
+    return _sim_mm(bits, model, backend, x, w)

@@ -14,6 +14,11 @@ Two backends:
 * ``kernels/crossbar_exec`` — the Pallas TPU kernel (VMEM-tiled), validated
   against this oracle in interpret mode.
 
+Both (plus :func:`execute_unrolled`) are registered in the
+``repro.pim.engine`` backend registry as ``"scan"``, ``"pallas"`` and
+``"unrolled"`` — select through ``engine.execute_state(...)`` rather than
+importing executors directly.
+
 The microcode ABI is produced by :meth:`repro.core.program.Program.to_microcode`:
 int32 rows ``(gate_code, in_a, in_b, out)``; gate codes from
 ``repro.core.gates.GATE_CODES`` (INIT=0 sets the output column to all-ones).

@@ -12,23 +12,59 @@ sequence of ``K`` multiply-accumulate steps:
         ripple-add the 2N-bit product into the accumulator
 
 The multiply is the partition-accelerated part (the paper's case study);
-copies and the accumulate ride along.  This is bit-exact and is used by
-``PIMLinear(mode="pim_sim")`` and the tests; the *analytical* scaling of the
-same mapping to full LM layers lives in ``pim/cost_model.py``.
+copies and the accumulate ride along.  This module is the *synthesis* side
+only: it lowers the arithmetic into a validated :class:`Program` through the
+shared :class:`~repro.core.program.ProgramBuilder` API.  Compilation
+caching, backend selection and execution live in ``repro.pim.engine`` —
+call :func:`repro.pim.engine.compile_dot` (or the thin
+:func:`pim_matmul_int` wrapper kept here for compatibility, which now
+compiles once per shape through the engine cache) rather than rebuilding
+programs per call.  The *analytical* scaling of the same mapping to full LM
+layers lives in ``pim/cost_model.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.operation import GateOp, InitOp, Operation, PartitionConfig
-from repro.core.program import Program
-from repro.pim import executor as ex
+from repro.core.operation import GateOp, PartitionConfig
+from repro.core.program import Program, ProgramBuilder
 from repro.pim.multpim import Layout, build_multpim
 
-__all__ = ["PimDot", "build_dot", "pim_matmul_int"]
+__all__ = ["PimDot", "build_dot", "max_dot_terms", "pim_matmul_int"]
+
+
+def _dot_layout(n_terms: int, n_bits: int, k: int):
+    """(acc_width, n_acc, need): the intra columns a dot of ``n_terms``
+    needs beyond the multiplier layout — THE budget formula, shared by
+    :func:`build_dot` (allocation) and :func:`max_dot_terms` (chunking)."""
+    acc_width = 2 * n_bits + max(1, (n_terms - 1).bit_length())
+    n_acc = (acc_width + k - 1) // k  # intra columns per accumulator plane
+    # planes: ACCS/ACCC (current sum/carry) + NACCS/NACCC (next) + result,
+    # plus the operand column pairs and the 14-column serial scratch strip
+    need = 2 * n_terms + 5 * n_acc + 14
+    return acc_width, n_acc, need
+
+
+def max_dot_terms(n_bits: int = 8, n_cols: int = 1024) -> int:
+    """Largest ``n_terms`` whose dot program fits one row's column budget.
+
+    Uses :func:`build_dot`'s own layout arithmetic without building
+    anything; the engine uses it to split long inner dimensions into
+    chunked GEMMs whose partials are summed exactly on the host.
+    """
+    k = n_bits
+    base = Layout.make(k)["width"]
+    m = n_cols // k
+    best = 0
+    for t in range(1, m):
+        if base + _dot_layout(t, n_bits, k)[2] <= m:
+            best = t
+        else:
+            break
+    return best
 
 
 @dataclasses.dataclass
@@ -41,27 +77,8 @@ class PimDot:
     acc_cols: Tuple[int, ...]            # accumulator (2N + log2(K) bits)
 
 
-class _B:
-    def __init__(self, prog: Program):
-        self.prog = prog
-
-    def gate(self, name, ins, out, label=""):
-        self.prog.append(Operation(gates=(GateOp(name, tuple(ins), out),),
-                                   label=label))
-
-    def par(self, gates, label=""):
-        self.prog.append(Operation(gates=tuple(gates), label=label))
-
-    def init_range(self, lo, hi, label=""):
-        self.prog.append(Operation(init=InitOp("range", lo, hi), label=label))
-
-    def init_periodic(self, ilo, ihi, p_start, p_end, period=1, label=""):
-        self.prog.append(Operation(
-            init=InitOp("periodic", ilo, ihi, p_start, p_end, period), label=label))
-
-
-def _ripple_add(b: _B, x_cols, y_cols, out_cols, tmp, width_x, width_y,
-                model: str, cfg: PartitionConfig):
+def _ripple_add(b: ProgramBuilder, x_cols, y_cols, out_cols, tmp, width_x,
+                width_y, model: str, cfg: PartitionConfig):
     """out = x + y (serial single-gate FA chain; legal in every model).
 
     ``tmp``: >= 14 scratch columns in ONE partition — tmp[0:7] FA internals
@@ -153,10 +170,7 @@ def build_dot(n_terms: int, n_bits: int = 8, n_cols: int = 1024,
     col = cfg.col
 
     base = L["width"]
-    acc_width = 2 * N + max(1, (n_terms - 1).bit_length())
-    n_acc = (acc_width + k - 1) // k  # intra columns per accumulator plane
-    # planes: ACCS/ACCC (current sum/carry) + NACCS/NACCC (next) + result
-    need = 2 * n_terms + 5 * n_acc + 14
+    acc_width, n_acc, need = _dot_layout(n_terms, N, k)
     if base + need > m:
         raise ValueError(
             f"layout overflow: {base + need} > {m} intra columns "
@@ -170,8 +184,8 @@ def build_dot(n_terms: int, n_bits: int = 8, n_cols: int = 1024,
     RES = NACCC + n_acc
     TMP = RES + n_acc                  # serial scratch strip (14 columns)
 
-    prog = Program(cfg=cfg, model=model, name=f"pim-dot-{n_terms}x{N}b")
-    b = _B(prog)
+    b = ProgramBuilder(cfg, model, name=f"pim-dot-{n_terms}x{N}b")
+    prog = b.program
 
     def plane(intra0):
         # bit p -> (partition p % k, intra intra0 + p // k)
@@ -334,34 +348,19 @@ def build_dot(n_terms: int, n_bits: int = 8, n_cols: int = 1024,
 
 
 def pim_matmul_int(x: np.ndarray, w: np.ndarray, n_bits: int = 8,
-                   model: str = "minimal", rows_per_crossbar: int = 256
-                   ) -> np.ndarray:
+                   model: str = "minimal", rows_per_crossbar: int = 256,
+                   backend: str = "scan") -> np.ndarray:
     """Bit-exact integer GEMM on the simulated crossbars.
 
     x: (M, K) uint, w: (O, K) uint -> (M, O) uint64.  Each (m, o) output is
     one simulator row; rows are packed 32/word and split across crossbars.
+
+    Compatibility wrapper over ``repro.pim.engine.matmul_int``: the gate
+    program is compiled through the engine cache (once per
+    ``(K, n_bits, model)``) and executed on the selected backend.
     """
-    M, K = x.shape
-    O, K2 = w.shape
-    assert K == K2
-    dot = build_dot(K, n_bits, model=model)
-    cfg = dot.program.cfg
+    from repro.pim import engine
 
-    total = M * O
-    xs = np.repeat(x, O, axis=0)      # (M*O, K)
-    ws = np.tile(w, (M, 1))           # (M*O, K)
-    n_cb = (total + rows_per_crossbar - 1) // rows_per_crossbar
-    pad = n_cb * rows_per_crossbar - total
-    if pad:
-        xs = np.pad(xs, ((0, pad), (0, 0)))
-        ws = np.pad(ws, ((0, pad), (0, 0)))
-    xs = xs.reshape(n_cb, rows_per_crossbar, K)
-    ws = ws.reshape(n_cb, rows_per_crossbar, K)
-
-    state = ex.blank_state(n_cb, cfg.n, rows_per_crossbar)
-    for i in range(K):
-        state = ex.write_numbers(state, dot.x_cols[i], xs[:, :, i])
-        state = ex.write_numbers(state, dot.w_cols[i], ws[:, :, i])
-    state = ex.execute(state, dot.program.to_microcode())
-    acc = ex.read_numbers(state, dot.acc_cols, rows_per_crossbar)
-    return acc.reshape(-1)[:total].reshape(M, O)
+    return engine.matmul_int(x, w, n_bits, model=model,
+                             rows_per_crossbar=rows_per_crossbar,
+                             backend=backend)

@@ -23,8 +23,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.operation import GateOp, InitOp, Operation, PartitionConfig
-from repro.core.program import Program
+from repro.core.operation import PartitionConfig
+from repro.core.program import Program, ProgramBuilder
 
 __all__ = ["SerialMultiplier", "build_serial_multiplier"]
 
@@ -38,19 +38,8 @@ class SerialMultiplier:
     result_cols: Tuple[int, ...]
 
 
-class _Builder:
-    def __init__(self, cfg: PartitionConfig):
-        self.prog = Program(cfg=cfg, model="baseline")
-
-    def gate(self, name, inputs, out, label=""):
-        self.prog.append(Operation(gates=(GateOp(name, tuple(inputs), out),), label=label))
-
-    def init_range(self, lo, hi, label=""):
-        self.prog.append(Operation(init=InitOp("range", lo, hi), label=label))
-
-
-def _full_adder(b: _Builder, x: int, y: int, c: int, u: List[int], sum_out: int,
-                cout_out: Optional[int]):
+def _full_adder(b: ProgramBuilder, x: int, y: int, c: int, u: List[int],
+                sum_out: int, cout_out: Optional[int]):
     """9 NOR gates (8 if cout is dropped); u = 7 fresh (initialized) temps."""
     u1, u2, u3, u4, u5, u6, u7 = u
     b.gate("NOR", (x, y), u1)
@@ -65,7 +54,7 @@ def _full_adder(b: _Builder, x: int, y: int, c: int, u: List[int], sum_out: int,
         b.gate("NOR", (u1, u5), cout_out)  # majority(x, y, c)
 
 
-def _half_adder(b: _Builder, x: int, y: int, v: List[int], sum_out: int,
+def _half_adder(b: ProgramBuilder, x: int, y: int, v: List[int], sum_out: int,
                 cout_out: Optional[int]):
     """6 NOR/NOT gates (5 without cout); v = 4 fresh temps."""
     v1, v2, v3, v4 = v
@@ -83,7 +72,7 @@ def build_serial_multiplier(n_bits: int = 32, n_cols: int = 1024,
     """N-bit x N-bit -> 2N-bit product in a single row, one gate per cycle."""
     n = n_bits
     cfg = PartitionConfig(n_cols, k)
-    b = _Builder(cfg)
+    b = ProgramBuilder(cfg, "baseline")
 
     # -- column layout -------------------------------------------------------
     A = list(range(0, n))
@@ -201,7 +190,7 @@ def build_serial_multiplier(n_bits: int = 32, n_cols: int = 1024,
             s_col[p] if s_col.get(p) is not None else zero for p in range(2 * n)
         )
 
-    prog = b.prog
+    prog = b.program
     prog.name = f"serial-mult-{n}b"
     return SerialMultiplier(
         program=prog,

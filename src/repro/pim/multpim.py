@@ -31,11 +31,10 @@ MultPIM — see EXPERIMENTS.md.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Tuple
 
-from repro.core.models import is_legal
-from repro.core.operation import GateOp, InitOp, Operation, PartitionConfig
-from repro.core.program import Program
+from repro.core.operation import GateOp, Operation, PartitionConfig
+from repro.core.program import Program, ProgramBuilder
 
 __all__ = ["PartitionedMultiplier", "build_multpim", "Layout"]
 
@@ -83,31 +82,6 @@ class PartitionedMultiplier:
     layout: dict
 
 
-class _B:
-    """Program builder with model-aware fusion."""
-
-    def __init__(self, cfg: PartitionConfig, model: str):
-        self.cfg = cfg
-        self.model = model
-        self.prog = Program(cfg=cfg, model=model)
-
-    def emit(self, op: Operation) -> None:
-        self.prog.append(op)
-
-    def fuse_or(self, fused: Operation, fallback: List[Operation], label="") -> None:
-        """Append the fused op if legal under the model, else the fallback."""
-        if is_legal(fused, self.cfg, self.model):
-            self.emit(fused)
-        else:
-            for o in fallback:
-                self.emit(o)
-
-    def periodic_init(self, ilo, ihi, p_start=0, p_end=None, period=1, label=""):
-        p_end = self.cfg.k - 1 if p_end is None else p_end
-        self.emit(Operation(
-            init=InitOp("periodic", ilo, ihi, p_start, p_end, period), label=label))
-
-
 def build_multpim(n_bits: int = 32, n_cols: int = 1024,
                   model: str = "minimal") -> PartitionedMultiplier:
     """Build the partitioned multiplier program for one of the three models."""
@@ -128,7 +102,7 @@ def build_multpim(n_bits: int = 32, n_cols: int = 1024,
     R, R2, CC, CT, NZ2 = L["R"], L["R2"], L["CC"], L["CT"], L["NZ2"]
     n_stages = L["n_stages"]
 
-    b = _B(cfg, model)
+    b = ProgramBuilder(cfg, model)
     col = cfg.col
 
     def par_gate(gate, ins_intra, out_intra, label=""):
@@ -140,8 +114,8 @@ def build_multpim(n_bits: int = 32, n_cols: int = 1024,
         b.emit(Operation(gates=gates, label=label))
 
     # ---------------- setup ----------------
-    b.periodic_init(INA, NZ, label="setup-init")          # INA, NZ
-    b.periodic_init(R, NZ2, label="setup-init-res")        # R,R2,CC,CT,NZ2
+    b.init_periodic(INA, NZ, label="setup-init")          # INA, NZ
+    b.init_periodic(R, NZ2, label="setup-init-res")        # R,R2,CC,CT,NZ2
     par_gate("NOT", (IA,), INA, "na")
 
     # ---------------- broadcast ----------------
@@ -173,9 +147,9 @@ def build_multpim(n_bits: int = 32, n_cols: int = 1024,
         """One contiguous periodic init covering BB, TBs, PP, U and the
         write-parity S/C — the read parity is outside the range either way."""
         if w == 1:
-            b.periodic_init(BB, C[1], label=label)      # [BB .. C1]
+            b.init_periodic(BB, C[1], label=label)      # [BB .. C1]
         else:
-            b.periodic_init(S[0], U + 6, label=label)   # [S0 .. U7]
+            b.init_periodic(S[0], U + 6, label=label)   # [S0 .. U7]
 
     def shift_writes(w: int, sum_src: Tuple[int, int]):
         """Sum of partition j -> S_w of partition j-1 (even/odd), top zero-fill.
@@ -241,7 +215,7 @@ def build_multpim(n_bits: int = 32, n_cols: int = 1024,
     fin = N % 2  # parity written by iteration N-1
     carry_known_zero = True
     for j in range(k):
-        b.periodic_init(PP, U + 6, p_start=j, p_end=j, label="fin-init")
+        b.init_periodic(PP, U + 6, p_start=j, p_end=j, label="fin-init")
         x, y = col(j, S[fin]), col(j, C[fin])
         cin = col(j, CT)
         sum_out, cout_out = col(j, R2), col(j, CC)
@@ -273,7 +247,7 @@ def build_multpim(n_bits: int = 32, n_cols: int = 1024,
             b.emit(Operation(gates=(GateOp("NOT", (cout_out,), col(j, PP)),)))
             b.emit(Operation(gates=(GateOp("NOT", (col(j, PP),), col(j + 1, CT)),)))
 
-    prog = b.prog
+    prog = b.program
     prog.name = f"multpim-{model}-{N}b"
     result = tuple(col(i, R) for i in range(N)) + tuple(col(j, R2) for j in range(k))
     return PartitionedMultiplier(

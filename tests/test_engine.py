@@ -1,0 +1,290 @@
+"""repro.pim.engine: compile cache, mode selection, backends, jit safety."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import linear, unembed
+from repro.pim import engine
+from repro.pim.matmul import pim_matmul_int
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    engine.clear_cache()
+    yield
+    engine.clear_cache()
+
+
+# --------------------------------------------------------------------------
+# compile cache
+# --------------------------------------------------------------------------
+
+def test_compile_cache_hit_returns_same_artifact():
+    a1 = engine.compile_dot(3, 8, model="minimal")
+    info = engine.cache_info()
+    assert (info.builds, info.misses, info.hits) == (1, 1, 0)
+    a2 = engine.compile_dot(3, 8, model="minimal")
+    assert a2 is a1, "cache hit must return the identical artifact"
+    info = engine.cache_info()
+    assert info.builds == 1 and info.hits == 1
+    # a different key builds again
+    a3 = engine.compile_dot(2, 8, model="minimal")
+    assert a3 is not a1
+    assert engine.cache_info().builds == 2
+
+
+def test_compile_matmul_shares_dot_cache():
+    a1 = engine.compile_dot(2, 8, model="minimal")
+    a2 = engine.compile_matmul(2, 8, model="minimal")
+    assert a2 is a1
+    assert engine.cache_info().builds == 1
+
+
+def test_pim_matmul_int_builds_exactly_once():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 256, size=(3, 4), dtype=np.uint64)
+    w = rng.integers(0, 256, size=(2, 4), dtype=np.uint64)
+    y1 = pim_matmul_int(x, w, n_bits=8, model="minimal",
+                        rows_per_crossbar=16)
+    y2 = pim_matmul_int(x, w, n_bits=8, model="minimal",
+                        rows_per_crossbar=16)
+    assert engine.cache_info().builds == 1
+    want = x.astype(object) @ w.T.astype(object)
+    assert np.array_equal(y1.astype(object), want)
+    assert np.array_equal(y2.astype(object), want)
+
+
+# --------------------------------------------------------------------------
+# mode selection
+# --------------------------------------------------------------------------
+
+def test_mode_default_and_nesting():
+    assert engine.current_mode() == "xla"
+    with engine.mode("quant"):
+        assert engine.current_mode() == "quant"
+        with engine.mode("pim_sim"):
+            assert engine.current_mode() == "pim_sim"
+        assert engine.current_mode() == "quant"
+    assert engine.current_mode() == "xla"
+
+
+def test_mode_restored_on_exception():
+    with engine.mode("quant"):
+        with pytest.raises(RuntimeError, match="boom"):
+            with engine.mode("pim_sim"):
+                assert engine.current_mode() == "pim_sim"
+                raise RuntimeError("boom")
+        assert engine.current_mode() == "quant"
+    assert engine.current_mode() == "xla"
+
+
+def test_mode_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown PIM mode"):
+        with engine.mode("analog"):
+            pass
+    assert engine.current_mode() == "xla"
+    with pytest.raises(ValueError):
+        engine.resolve_mode("analog")
+
+
+def test_explicit_mode_overrides_ambient():
+    x = jnp.ones((2, 4), jnp.float32)
+    w = jnp.eye(4, dtype=jnp.float32)
+    with engine.mode("pim_sim"):
+        # explicit "xla" must NOT route through the simulator: exact einsum
+        y = linear(x, w, mode="xla")
+    assert np.array_equal(np.asarray(y), np.asarray(x))
+
+
+# --------------------------------------------------------------------------
+# backends
+# --------------------------------------------------------------------------
+
+def test_backend_registry_contents_and_unknown():
+    names = engine.backends()
+    for expected in ("scan", "jnp", "unrolled", "pallas"):
+        assert expected in names
+    with pytest.raises(ValueError, match="unknown backend"):
+        engine.get_backend("does-not-exist")
+
+
+def test_custom_backend_does_not_suppress_defaults():
+    """Registering an extension backend first must still leave the
+    built-ins resolvable (the ROADMAP quant_tp extension flow)."""
+    engine.register_backend("_test_backend", lambda s, mc, **kw: s)
+    try:
+        names = engine.backends()
+        assert "_test_backend" in names and "scan" in names
+        assert engine.get_backend("scan") is not None
+    finally:
+        engine._backends.pop("_test_backend", None)
+
+
+def test_backends_agree_on_microcode():
+    rng = np.random.default_rng(7)
+    state = jnp.asarray(
+        rng.integers(0, 2 ** 32, size=(2, 24, 2), dtype=np.uint32))
+    g = 40
+    mc = np.stack([rng.integers(0, 6, g), rng.integers(0, 24, g),
+                   rng.integers(0, 24, g), rng.integers(0, 24, g)],
+                  axis=1).astype(np.int32)
+    outs = {b: np.asarray(engine.execute_state(jnp.array(state), mc,
+                                               backend=b))
+            for b in ("scan", "unrolled", "pallas", "numpy")}
+    for b in ("unrolled", "pallas", "numpy"):
+        assert np.array_equal(outs["scan"], outs[b]), b
+
+
+def test_execute_pallas_matches_scan_on_artifact():
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 256, size=(2, 3), dtype=np.uint64)
+    w = rng.integers(0, 256, size=(2, 3), dtype=np.uint64)
+    art = engine.compile_dot(3, 8, model="minimal")
+    y_scan = engine.execute(art, x, w, backend="scan", rows_per_crossbar=16)
+    y_pal = engine.execute(art, x, w, backend="pallas", rows_per_crossbar=16)
+    want = x.astype(object) @ w.T.astype(object)
+    assert np.array_equal(y_scan.astype(object), want)
+    assert np.array_equal(y_pal, y_scan)
+
+
+def test_execute_rejects_wrong_k():
+    art = engine.compile_dot(3, 8, model="minimal")
+    x = np.ones((2, 4), np.uint64)
+    w = np.ones((2, 4), np.uint64)
+    with pytest.raises(ValueError, match="compiled for 3 terms"):
+        engine.execute(art, x, w)
+
+
+# --------------------------------------------------------------------------
+# jit composition
+# --------------------------------------------------------------------------
+
+def _tiny_operands():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(2, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))
+    return x, w
+
+
+def test_matmul_int_chunks_long_inner_dim():
+    """K beyond one row's column budget splits into exact cached chunks."""
+    from repro.pim.matmul import max_dot_terms
+
+    chunk = max_dot_terms(8)
+    K = chunk + 3
+    rng = np.random.default_rng(9)
+    x = rng.integers(0, 256, size=(2, K), dtype=np.uint64)
+    w = rng.integers(0, 256, size=(2, K), dtype=np.uint64)
+    y = engine.matmul_int(x, w, 8, model="minimal", rows_per_crossbar=16)
+    want = x.astype(object) @ w.T.astype(object)
+    assert np.array_equal(y.astype(object), want)
+    assert engine.cache_info().builds == 2  # one per distinct chunk size
+
+
+def test_pim_sim_is_differentiable():
+    """Straight-through VJP: quantized forward, ideal-matmul backward."""
+    x, w = _tiny_operands()
+
+    def loss(w_):
+        return jnp.sum(engine.sim_linear(x, w_) ** 2)
+
+    val, grad = jax.value_and_grad(loss)(w)
+    y = np.asarray(engine.sim_linear(x, w))
+    ref = np.asarray(x).T @ (2 * y)   # d/dw sum(y^2) with y treated as x@w
+    assert np.isfinite(val)
+    np.testing.assert_allclose(np.asarray(grad), ref, rtol=1e-5)
+    # and it compiles
+    _, g2 = jax.jit(jax.value_and_grad(loss))(w)
+    assert np.array_equal(np.asarray(grad), np.asarray(g2))
+
+
+def test_pim_sim_jit_matches_eager_bit_exactly():
+    x, w = _tiny_operands()
+    with engine.mode("pim_sim"):
+        eager = linear(x, w)
+        jitted = jax.jit(lambda a, b: linear(a, b))(x, w)
+    assert np.array_equal(np.asarray(eager), np.asarray(jitted))
+
+
+def test_modes_agree_on_tiny_linear_under_jit():
+    x, w = _tiny_operands()
+    ref = np.asarray(x) @ np.asarray(w)
+    scale = np.abs(ref).max()
+    results = {}
+    for m in ("xla", "quant", "pim_sim"):
+        with engine.mode(m):
+            # one jit wrapper per mode: the ambient mode is read at trace
+            # time and is not part of jax's jit cache key (see engine docs)
+            results[m] = np.asarray(jax.jit(lambda a, b: linear(a, b))(x, w))
+    assert np.array_equal(results["xla"], ref)  # einsum is the reference
+    for m in ("quant", "pim_sim"):  # fixed-point paths: quantization error
+        assert np.abs(results[m] - ref).max() / scale < 0.05, m
+
+
+def test_config_threading_through_loss(small_model_config):
+    """cfg.pim_mode reaches every linear in a jitted loss."""
+    from repro.models import model_lib as M
+
+    cfg = small_model_config.scaled(n_layers=1, pattern=("ad",),
+                                    loss_chunk=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)),
+                              jnp.int32),
+    }
+    base = float(jax.jit(lambda p, b: M.loss_fn(p, b, cfg))(params, batch))
+    qcfg = cfg.scaled(pim_mode="quant")
+    quant = float(jax.jit(lambda p, b: M.loss_fn(p, b, qcfg))(params, batch))
+    assert np.isfinite(base) and np.isfinite(quant)
+    assert abs(quant - base) / abs(base) < 0.25  # int8 path, same model
+    assert quant != base  # and it actually took the quantized path
+
+
+# --------------------------------------------------------------------------
+# chunked unembed
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [None, 3, 5, 64])
+def test_unembed_chunk_matches_full(chunk):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(2, 7, 16)).astype(np.float32))
+    table = jnp.asarray(rng.normal(size=(13, 16)).astype(np.float32))
+    full = unembed(x, table)
+    got = unembed(x, table, chunk=chunk)
+    assert got.shape == full.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_unembed_chunk_under_jit():
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    table = jnp.asarray(rng.normal(size=(12, 16)).astype(np.float32))
+    got = jax.jit(lambda a, t: unembed(a, t, chunk=5))(x, table)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(unembed(x, table)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_loss_path_unembed_chunk_equivalent(small_model_config):
+    from repro.models import model_lib as M
+
+    cfg = small_model_config.scaled(n_layers=1, pattern=("ad",),
+                                    loss_chunk=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(2)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)),
+                              jnp.int32),
+    }
+    base = float(M.loss_fn(params, batch, cfg))
+    chunked = float(M.loss_fn(params, batch,
+                              cfg.scaled(unembed_chunk=100)))
+    np.testing.assert_allclose(chunked, base, rtol=1e-5)

@@ -84,12 +84,12 @@ def test_quant_linear_error_bound():
 
 def test_pim_sim_linear_matches_float():
     """Bit-exact crossbar execution of a linear layer (7-bit fixed point)."""
-    from repro.models.layers import _pim_sim_linear
+    from repro.pim.engine import sim_linear
 
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.normal(size=(2, 6)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(6, 3)).astype(np.float32))
-    y = _pim_sim_linear(x, w)
+    y = sim_linear(x, w)
     ref = np.asarray(x) @ np.asarray(w)
     rel = np.abs(np.asarray(y) - ref).max() / np.abs(ref).max()
     assert rel < 0.08

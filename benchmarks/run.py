@@ -17,6 +17,12 @@ Paper anchors:
   sim_throughput  — crossbar-simulator throughput (real wall time)
   dot_accumulate  — beyond-paper carry-save accumulator (before/after)
   pim_lm_gemm     — the paper's technique applied to the assigned archs
+
+``--suite serving`` runs the continuous-batching decode-throughput
+benchmark instead (tokens/sec at batch 1/4/16 over a synthetic Poisson
+request trace; batch 1 doubles as the sequential-request-handling
+baseline); ``--suite all`` runs both.  All rows land in the same JSON
+artifact.
 """
 from __future__ import annotations
 
@@ -210,8 +216,70 @@ def pim_lm_gemm() -> List[Row]:
     return rows
 
 
+def serving_throughput() -> List[Row]:
+    """Continuous-batching decode throughput on a synthetic Poisson trace.
+
+    One scheduler per batch size, warmed up (prefill bucket + decode step
+    compiled) before the measured trace so tokens/sec reflects steady
+    state.  ``batch 1`` is sequential request handling — one request
+    occupies the engine end-to-end — so the batch>=1 ratios are the
+    continuous-batching win.
+    """
+    import jax
+
+    import repro.configs as configs
+    from repro.models import model_lib as M
+    from repro.serving import (Scheduler, ServingConfig, ServingMetrics,
+                               synthetic_requests)
+
+    cfg = configs.get("qwen1.5-0.5b").smoke()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    gen = 8
+    rows: List[Row] = []
+    tps = {}
+    for batch in (1, 4, 16):
+        # deep enough trace that the fill/drain ramps are amortized and the
+        # window measures full-slot steady state, even at batch 16
+        n_req = max(12, 4 * batch)
+        sched = Scheduler(params, cfg,
+                          ServingConfig(max_batch=batch, prompt_bucket=16))
+        warm = synthetic_requests(max(2, batch), vocab_size=cfg.vocab_size,
+                                  prompt_lens=[8], max_new_tokens=2, seed=99,
+                                  start_time=sched.clock())
+        for r in warm:
+            sched.submit_request(r)
+        sched.run()
+        sched.metrics = ServingMetrics()  # timed window excludes compiles
+        reqs = synthetic_requests(n_req, vocab_size=cfg.vocab_size,
+                                  prompt_lens=[5, 8, 12, 16],
+                                  max_new_tokens=gen, rate=200.0, seed=0,
+                                  start_time=sched.clock())
+        for r in reqs:
+            sched.submit_request(r)
+        sched.run()
+        assert sched.decode_traces == 1, "steady-state decode recompiled"
+        s = sched.metrics.summary()
+        tps[batch] = s["tokens_per_s"]
+        rows.append((f"serving/continuous_batch{batch}_tok_s",
+                     s["mean_tpot_s"] * 1e6,
+                     f"{s['tokens_per_s']:.1f} tok/s "
+                     f"(TTFT {s['mean_ttft_s'] * 1e3:.0f}ms, "
+                     f"{s['n_finished']}/{n_req} reqs)"))
+    for batch in (4, 16):
+        rows.append((f"serving/continuous_vs_sequential_batch{batch}", 0.0,
+                     f"{tps[batch] / tps[1]:.2f}x aggregate tok/s vs "
+                     f"one-request-at-a-time"))
+    return rows
+
+
 TABLES = [fig6a_latency, fig6b_control, fig6c_area, energy, bounds,
           sim_throughput, dot_accumulate, engine_compile_cache, pim_lm_gemm]
+
+SUITES = {
+    "core": TABLES,
+    "serving": [serving_throughput],
+    "all": TABLES + [serving_throughput],
+}
 
 
 def main(argv=None) -> None:
@@ -220,11 +288,14 @@ def main(argv=None) -> None:
                     help="machine-readable results path (e.g. "
                          "BENCH_partitionpim.json, as CI passes); empty "
                          "keeps local runs side-effect-free")
+    ap.add_argument("--suite", choices=sorted(SUITES), default="core",
+                    help="core: paper tables; serving: continuous-batching "
+                         "decode throughput; all: both")
     args = ap.parse_args(argv)
 
     results = {}
     print("name,us_per_call,derived")
-    for table in TABLES:
+    for table in SUITES[args.suite]:
         for name, us, derived in table():
             print(f"{name},{us:.1f},{derived}")
             results[name] = {"us_per_call": round(us, 1), "derived": derived}

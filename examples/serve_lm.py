@@ -1,7 +1,8 @@
 """Serving example: batched prefill + greedy decode on a small config.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch jamba-v0.1-52b]
-(any of the 10 registered architectures; --preset tiny keeps it CPU-sized)
+(any decoder-only architecture — enc-dec/vision and sliding-window serving
+are ROADMAP follow-ons; --preset tiny keeps it CPU-sized)
 """
 import argparse
 import sys

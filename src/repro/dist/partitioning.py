@@ -117,15 +117,22 @@ def batch_pspecs(batch, mesh):
         batch, is_leaf=_is_shape_leaf)
 
 
-def cache_pspecs(caches, mesh):
+def cache_pspecs(caches, mesh, *, batch_over_dp: bool = True):
     """Decode caches ``(n_super, batch, ...)``: batch dim over DP axes, the
-    head dim (-2) of rank>=4 leaves over the "model" axis."""
+    head dim (-2) of rank>=4 leaves over the "model" axis.
+
+    ``batch_over_dp=False`` keeps the batch (slot) dim replicated while
+    heads still ride "model" — the serving cache pool's placement:
+    continuous batching scatters arbitrary slots on admit/evict, and a
+    DP-sharded slot dim would turn every single-slot update into
+    cross-device traffic.
+    """
     dp, tp_ax = dctx.mesh_axes(mesh)
 
     def leaf(s):
         nd = len(s.shape)
         entries = [None] * nd
-        if nd >= 2:
+        if nd >= 2 and batch_over_dp:
             entries[1] = dp
         if nd >= 4 and tp_ax:
             entries[-2] = tp_ax

@@ -67,10 +67,25 @@ def _type_bytes(ty: str) -> int:
     return total
 
 
-def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+# Link bandwidths for the modeled wire time: intra-pod ICI vs the much
+# thinner pod-boundary (DCN) links the 2x16x16 pass exercises.
+INTRA_POD_GBPS = 100.0
+INTER_POD_GBPS = 25.0
+
+
+def parse_collectives(hlo_text: str, pod_size: Optional[int] = None
+                      ) -> Dict[str, Dict[str, float]]:
     """Per collective kind: instruction count + modeled per-device wire bytes
     (ring algorithms: AG/RS/A2A move size*(g-1)/g, AR moves 2x that,
-    permute moves its full payload once)."""
+    permute moves its full payload once).
+
+    With ``pod_size`` set, replica groups larger than one pod additionally
+    report ``cross_pod_bytes``: a ring over ``g`` contiguous devices
+    spanning ``p = ceil(g / pod_size)`` pods crosses a pod boundary on
+    ``p`` of its ``g`` hops, so that fraction of each device's wire bytes
+    rides the inter-pod links (the bandwidth term
+    :func:`collective_time_s` charges at ``INTER_POD_GBPS``).
+    """
     out: Dict[str, Dict[str, float]] = {}
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)
@@ -100,10 +115,29 @@ def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
             wire = nbytes * (g - 1) / g
         else:  # collective-permute
             wire = float(nbytes)
-        d = out.setdefault(op, {"count": 0, "wire_bytes": 0.0})
+        cross = 0.0
+        if pod_size and g > pod_size:
+            spans = (g + pod_size - 1) // pod_size
+            cross = wire * spans / g
+        d = out.setdefault(op, {"count": 0, "wire_bytes": 0.0,
+                                "cross_pod_bytes": 0.0})
         d["count"] += 1
         d["wire_bytes"] += wire
+        d["cross_pod_bytes"] += cross
     return out
+
+
+def collective_time_s(colls: Dict[str, Dict[str, float]], *,
+                      intra_gbps: float = INTRA_POD_GBPS,
+                      inter_gbps: float = INTER_POD_GBPS) -> float:
+    """Modeled per-device wire time: intra-pod bytes at ICI bandwidth plus
+    the pod-boundary fraction serialized on the inter-pod links."""
+    t = 0.0
+    for c in colls.values():
+        cross = c.get("cross_pod_bytes", 0.0)
+        t += ((c["wire_bytes"] - cross) / (intra_gbps * 1e9)
+              + cross / (inter_gbps * 1e9))
+    return t
 
 
 # --------------------------------------------------------------------------
@@ -270,7 +304,23 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 n_devices=mesh.size,
                 params=M.param_count(cfg),
             )
-            if multi_pod or mem_only:
+            if multi_pod:
+                # the multi-pod pass proves the "pod" axis shards AND prices
+                # its boundary: groups spanning pods pay the inter-pod
+                # bandwidth term on their cross-pod byte fraction
+                pod_size = mesh.size // mesh.shape["pod"]
+                colls = parse_collectives(compiled_s.as_text(),
+                                          pod_size=pod_size)
+                result.update(
+                    collectives=colls,
+                    wire_bytes_per_dev=sum(c["wire_bytes"]
+                                           for c in colls.values()),
+                    cross_pod_bytes_per_dev=sum(c["cross_pod_bytes"]
+                                                for c in colls.values()),
+                    wire_time_s=collective_time_s(colls),
+                )
+                return result
+            if mem_only:
                 return result
             # 2) unrolled lowering: FLOP / byte / collective accounting
             fn, args = lower_cell(cfg, shape, mesh, unroll=True,

@@ -1,12 +1,23 @@
-"""Batched serving driver: prefill a prompt batch, decode greedily.
+"""Serving driver: a thin CLI over the ``repro.serving`` runtime.
+
+Replays a synthetic (Poisson-arrival) request trace through the
+continuous-batching scheduler: a fixed ``--batch``-slot decode batch whose
+finished slots are backfilled from the FIFO admission queue, prefill on
+admit (bucketed prompts), a persistent slot-indexed KV-cache pool, and one
+jitted decode step that never recompiles as requests churn.  Prints
+per-request TTFT/TPOT and aggregate tokens/sec; ``--sequential`` runs the
+same trace one-request-at-a-time (a max_batch=1 scheduler) for an A/B
+throughput comparison.
 
 CPU-runnable with ``--smoke``/``--preset``.  On multi-device runs the
-driver enters the ``ElasticMesh`` (same policy as ``launch/train.py``),
-batches requests over the "data" axis, and keeps the decode caches sharded
-with ``dist.cache_pspecs`` — batch over the data-parallel axes, attention
-heads over "model" — so steady-state decode never gathers the caches to
-one device.  ``--pim-mode`` threads a ``repro.pim.engine`` lowering mode
-through the config (e.g. ``quant`` for the int8 Pallas path).
+driver enters the ``ElasticMesh`` (same policy as ``launch/train.py``);
+the cache pool keeps its slot dim replicated while attention heads shard
+over "model" (``dist.cache_pspecs(batch_over_dp=False)``), so admits stay
+single-slot writes and steady-state decode never gathers the caches.
+``--pim-mode`` threads a ``repro.pim.engine`` lowering mode through the
+config (e.g. ``pim_sim`` decodes on the bit-accurate crossbar simulator,
+whose persistent ``ExecutionSession`` uploads crossbar state once per
+artifact and streams only operand columns per token).
 """
 from __future__ import annotations
 
@@ -15,14 +26,26 @@ import contextlib
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.dist import context as dctx
-from repro.dist import partitioning as dpart
 from repro.launch.train import PRESETS, build_cfg
 from repro.models import model_lib as M
+from repro.pim import engine
 from repro.runtime.fault_tolerance import ElasticMesh
+from repro.serving import Scheduler, ServingConfig, synthetic_requests
+
+
+def serve_trace(params, cfg, requests, *, max_batch: int, prompt_bucket: int,
+                mesh=None):
+    """Run a request trace through the scheduler; returns (results, summary)."""
+    scfg = ServingConfig(max_batch=max_batch, prompt_bucket=prompt_bucket)
+    sched = Scheduler(params, cfg, scfg, mesh=mesh)
+    for req in requests:
+        sched.submit_request(req)
+    results = sched.run()
+    summary = sched.metrics.summary()
+    summary["decode_traces"] = sched.decode_traces
+    return results, summary
 
 
 def main():
@@ -31,13 +54,23 @@ def main():
     ap.add_argument("--preset", choices=list(PRESETS), default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--layers", type=int, default=None)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (continuous-batching batch size)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=64,
+                    help="max synthetic prompt length (lengths cycle "
+                         "through ~{1/4, 1/2, 3/4, 1} of this)")
+    ap.add_argument("--gen", type=int, default=32,
+                    help="generation budget per request")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate in req/s (0: closed batch)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--pim-mode", choices=["xla", "quant", "pim_sim"],
                     default=None)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--sequential", action="store_true",
+                    help="also run the trace one-request-at-a-time "
+                         "(max_batch=1) for an A/B comparison")
     args = ap.parse_args()
 
     mesh = None
@@ -50,57 +83,52 @@ def main():
     cfg = build_cfg(args)
     if args.pim_mode:
         cfg = cfg.scaled(pim_mode=args.pim_mode)
+    # right-size the cache pool: capacity = longest prompt + budget (decode
+    # attention cost scales with pool capacity, not with tokens generated)
+    cfg = cfg.scaled(max_seq_len=args.prompt_len + args.gen)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
-        jnp.int32)}
-    if cfg.is_encoder_decoder:
-        batch["frames"] = jnp.asarray(rng.normal(size=(
-            args.batch, args.prompt_len // cfg.audio_frames_div,
-            cfg.d_model)), jnp.float32)
-    if cfg.vision_dim:
-        batch["patches"] = jnp.asarray(rng.normal(size=(
-            args.batch, cfg.n_patches, cfg.vision_dim)), jnp.float32)
+    plens = sorted({max(1, args.prompt_len * f // 4) for f in (1, 2, 3, 4)})
+    requests = synthetic_requests(
+        args.requests, vocab_size=cfg.vocab_size, prompt_lens=plens,
+        max_new_tokens=args.gen, rate=args.rate, seed=args.seed,
+        start_time=time.monotonic())
+
+    # recurrent blocks fold right-padding into their state: serve those
+    # unbucketed (exact; one prefill compile per distinct prompt length)
+    bucket = 1 if cfg.has_recurrent_blocks else max(8, args.prompt_len // 4)
 
     with mesh_ctx:
-        if mesh is not None:
-            # requests ride the "data" axis; the in-model constraints keep
-            # activations there through the stack
-            batch = jax.device_put(batch, dpart.tree_shardings(
-                dpart.batch_pspecs(batch, mesh), mesh))
-        prefill = jax.jit(lambda p, b: M.prefill(p, b, cfg))
-        decode = jax.jit(lambda p, t, pos, c: M.decode_step(p, t, pos, c,
-                                                            cfg))
-
-        t0 = time.time()
-        logits, caches = prefill(params, batch)
-        logits.block_until_ready()
-        t_prefill = time.time() - t0
-        if mesh is not None:
-            # pin the decode caches (batch over DP axes, heads over
-            # "model") so every decode step reads/writes them in place
-            caches = jax.device_put(caches, dpart.tree_shardings(
-                dpart.cache_pspecs(caches, mesh), mesh))
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-
-        generated = [np.asarray(tok)]
-        t0 = time.time()
-        for i in range(args.gen - 1):
-            tok, _, caches = decode(params, tok,
-                                    jnp.int32(args.prompt_len + i), caches)
-            generated.append(np.asarray(tok))
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t0
-
-    out = np.concatenate(generated, axis=1)
-    toks_per_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
-    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.0f}ms "
-          f"({args.batch * args.prompt_len / t_prefill:.0f} tok/s)")
-    print(f"decode:  {args.gen - 1} steps in {t_decode*1e3:.0f}ms "
-          f"({toks_per_s:.0f} tok/s)")
-    print("sample generation:", out[0, :16].tolist())
-    return out
+        results, summary = serve_trace(
+            params, cfg, requests, max_batch=args.batch,
+            prompt_bucket=bucket, mesh=mesh)
+        print(f"served {summary['n_finished']}/{summary['n_requests']} "
+              f"requests, {summary['total_tokens']} tokens @ "
+              f"{summary['tokens_per_s']:.0f} tok/s "
+              f"(batch {args.batch}, {summary['decode_traces']} decode "
+              f"compiles)")
+        print(f"TTFT {summary['mean_ttft_s'] * 1e3:.0f}ms mean | "
+              f"TPOT {summary['mean_tpot_s'] * 1e3:.1f}ms | "
+              f"queue wait {summary['mean_queue_wait_s'] * 1e3:.0f}ms | "
+              f"active slots {summary['mean_active_slots']:.1f}")
+        if args.pim_mode == "pim_sim":
+            info = engine.cache_info()
+            print(f"[pim] crossbar uploads {info.exec_uploads}, "
+                  f"weight-stationary session hits {info.exec_hits}")
+        if args.sequential:
+            # replay the same trace: keep relative arrival offsets so both
+            # runs are gated by the identical Poisson process
+            t0 = min(r.arrival_time for r in requests)
+            base = time.monotonic()
+            for req in requests:
+                req.arrival_time = base + (req.arrival_time - t0)
+            _, seq = serve_trace(params, cfg, requests, max_batch=1,
+                                 prompt_bucket=bucket, mesh=mesh)
+            speed = summary["tokens_per_s"] / max(seq["tokens_per_s"], 1e-9)
+            print(f"sequential baseline: {seq['tokens_per_s']:.0f} tok/s "
+                  f"-> continuous batching {speed:.2f}x")
+        rid0 = min(results)
+        print("sample generation:", results[rid0][:16].tolist())
+    return results
 
 
 if __name__ == "__main__":

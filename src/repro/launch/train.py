@@ -13,6 +13,7 @@ from __future__ import annotations
 import argparse
 import contextlib
 import dataclasses
+import functools
 import json
 import os
 import time
@@ -25,7 +26,9 @@ import numpy as np
 import repro.configs as configs
 from repro.data.pipeline import AudioStub, SyntheticLM, VisionStub
 from repro.dist import context as dctx
+from repro.dist import partitioning as dpart
 from repro.models import model_lib as M
+from repro.models.layers import as_shapes
 from repro.optim.adamw import AdamWConfig, apply_updates, init_state
 from repro.runtime.fault_tolerance import (CheckpointManager, ElasticMesh,
                                            StragglerMonitor)
@@ -89,6 +92,7 @@ def main():
 
     # Single-device runs skip mesh machinery entirely; multi-device runs get
     # the largest valid (pod, data, model) mesh from whatever is alive.
+    mesh = None
     mesh_ctx = contextlib.nullcontext()
     if jax.device_count() > 1:
         mesh = ElasticMesh(model_parallel=args.model_parallel).make()
@@ -106,8 +110,25 @@ def main():
     vision = VisionStub(cfg.vision_dim, cfg.n_patches) if cfg.vision_dim \
         else None
 
-    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    opt_state = init_state(ocfg, params)
+    if mesh is not None:
+        # ZeRO-3 init: jit the initializers under fsdp=True out-shardings so
+        # parameters and optimizer state materialize directly onto their
+        # shards — host/device memory is bounded by the *sharded* model size,
+        # never the replicated one.
+        pshapes = as_shapes(M.param_specs(cfg))
+        p_part = dpart.param_pspecs(pshapes, mesh, fsdp=True)
+        p_shard = dpart.tree_shardings(p_part, mesh)
+        params = jax.jit(lambda k: M.init_params(cfg, k),
+                         out_shardings=p_shard)(jax.random.PRNGKey(args.seed))
+        o_part = dpart.opt_state_pspecs(
+            pshapes, p_part, jax.eval_shape(lambda: init_state(ocfg, pshapes)),
+            mesh)
+        o_shard = dpart.tree_shardings(o_part, mesh)
+        opt_state = jax.jit(lambda p: init_state(ocfg, p),
+                            out_shardings=o_shard)(params)
+    else:
+        params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+        opt_state = init_state(ocfg, params)
     start_step = 0
     manager = None
     if args.ckpt_dir:
@@ -119,7 +140,9 @@ def main():
                 start_step = step
                 print(f"[resume] restored step {step}")
 
-    @jax.jit
+    # donate params/opt_state through apply_updates: the updated trees alias
+    # the old buffers, so a ZeRO-3 run never holds two copies of the state
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
     def train_step(params, opt_state, batch):
         loss, grads = jax.value_and_grad(
             lambda p: M.loss_fn(p, batch, cfg))(params)

@@ -135,13 +135,19 @@ class ModelConfig:
         return self.n_encoder_layers > 0
 
     @property
+    def has_recurrent_blocks(self) -> bool:
+        """Any SSM/xLSTM block in the stack (state folds the whole prefix,
+        so e.g. right-padded prompts are not admissible)."""
+        return any(k in ("md", "me", "xm", "xs") for k in self.pattern)
+
+    @property
     def sub_quadratic(self) -> bool:
         """Whether long-context decode is admissible (DESIGN.md §3):
         sliding-window attention bounds the cache; SSM/hybrid blocks keep
         O(1)/O(S) per-token state.  Pure full-attention stacks are skipped."""
         if self.sliding_window:
             return True
-        return any(k in ("md", "me", "xm", "xs") for k in self.pattern)
+        return self.has_recurrent_blocks
 
     def runnable(self, shape: ShapeSpec) -> Tuple[bool, str]:
         """Whether an assigned (arch x shape) cell runs, and why not if not."""

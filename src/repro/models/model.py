@@ -224,26 +224,35 @@ def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
     if mode == "decode":
         cap = cache["k"].shape[1]
         idx = pos % cap
+        per_slot = jnp.ndim(pos) == 1  # continuous batching: (B,) positions
+
+        if per_slot:
+            # each slot writes its token at its own cache index
+            bidx = jnp.arange(b)
+
+            def put(c, new):
+                return c.at[bidx, idx].set(new[:, 0].astype(c.dtype))
+        else:
+            def put(c, new):
+                start = (0, idx) + (0,) * (new.ndim - 2)
+                return jax.lax.dynamic_update_slice(c, new.astype(c.dtype),
+                                                    start)
+
         if quant:
             kq, ks = _quantize_kv(k)
             vq, vs = _quantize_kv(v)
-            kc = jax.lax.dynamic_update_slice(cache["k"], kq, (0, idx, 0, 0))
-            vc = jax.lax.dynamic_update_slice(cache["v"], vq, (0, idx, 0, 0))
-            ksc = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
-                                               (0, idx, 0))
-            vsc = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
-                                               (0, idx, 0))
+            kc, vc = put(cache["k"], kq), put(cache["v"], vq)
+            ksc, vsc = put(cache["k_scale"], ks), put(cache["v_scale"], vs)
             k_full = _dequantize_kv(kc, ksc, cfg.compute_dtype)
             v_full = _dequantize_kv(vc, vsc, cfg.compute_dtype)
             new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
         else:
-            kc = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
-            vc = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            kc, vc = put(cache["k"], k), put(cache["v"], v)
             k_full, v_full = kc, vc
             new_cache = {"k": kc, "v": vc}
         cache_len = jnp.minimum(pos + 1, cap)
+        if per_slot:
+            cache_len = cache_len[:, None]  # (B, 1): per-slot mask rows
         out = attn.decode_attention(q, k_full, v_full, cache_len)
     else:
         window = cfg.sliding_window if causal else None
@@ -518,8 +527,19 @@ def _loss_fn(params, batch, cfg: ModelConfig):
     return nll.sum() / n_tok
 
 
-def prefill(params, batch, cfg: ModelConfig):
-    """Forward the prompt; return (last-token logits, caches)."""
+def prefill(params, batch, cfg: ModelConfig, last_index=None):
+    """Forward the prompt; return (last-token logits, caches).
+
+    ``last_index`` — optional (B,) int32 index of each request's last real
+    prompt token, for right-padded (bucketed) prompts: logits are read
+    there instead of at ``S - 1``.  Causal masking makes every position
+    <= ``last_index`` independent of the padding, so bucketed prefill is
+    exact for *full-attention* stacks only: recurrent blocks (Mamba/xLSTM)
+    fold the padding into their state, and sliding-window caches both size
+    their ring by the padded length and keep pad KV inside the window —
+    serve those unbucketed (and windowed ones not at all, for now; the
+    serving scheduler enforces both).
+    """
     with _pim_ctx(cfg):
         tokens = batch["tokens"]
         x = _embed_in(params, tokens, cfg)
@@ -528,7 +548,12 @@ def prefill(params, batch, cfg: ModelConfig):
         x, caches = _decoder_stack(params, x, cfg, positions=positions,
                                    mode="prefill", memory=memory)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = unembed(x[:, -1], _unembed_table(params, cfg))
+        if last_index is None:
+            xl = x[:, -1]
+        else:
+            xl = jnp.take_along_axis(
+                x, last_index[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        logits = unembed(xl, _unembed_table(params, cfg))
         return logits.astype(jnp.float32), caches
 
 
@@ -543,6 +568,32 @@ def decode_step(params, token, pos, caches, cfg: ModelConfig):
         logits = unembed(x[:, -1],
                          _unembed_table(params, cfg)).astype(jnp.float32)
         next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return next_tok, logits, new_caches
+
+
+def decode_step_slots(params, tokens, pos, active, caches, cfg: ModelConfig):
+    """One decode step over a slot batch (continuous batching).
+
+    ``tokens``: (B, 1) int32 current token per slot; ``pos``: (B,) int32
+    absolute position of that token per slot; ``active``: (B,) bool slot
+    occupancy.  Shapes are fixed at ``B = max_batch``, so one jitted step
+    serves a churning request mix without ever recompiling — slots attend
+    only up to their own ``pos`` (per-slot ``cache_len`` masks), and
+    finished/empty slots keep computing on stale state.  An inactive slot
+    writes its (garbage) KV at ``pos[b] % cap`` of its *own* cache rows,
+    which other slots never read and which prefill-on-admit fully
+    overwrites; its emitted token is pinned to 0 by the active mask.
+    """
+    with _pim_ctx(cfg):
+        x = _embed_in(params, tokens, cfg)
+        x, new_caches = _decoder_stack(params, x, cfg,
+                                       positions=pos[:, None],
+                                       mode="decode", caches=caches, pos=pos)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(x[:, -1],
+                         _unembed_table(params, cfg)).astype(jnp.float32)
+        next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        next_tok = jnp.where(active[:, None], next_tok, 0)
         return next_tok, logits, new_caches
 
 

@@ -17,6 +17,17 @@ control, execution).  This module is the driving side, as one API:
   ``"unrolled"`` XLA-compiles one op per microcode row — fast per step but
   compile time grows with program length, so reserve it for short programs
   (the benchmark uses it to measure exactly that trade-off).
+* :class:`ExecutionSession` / :func:`session_for` — persistent execution:
+  crossbar state stays resident across ``execute`` calls, keyed per
+  (geometry, weight) — a crossbar array in real PIM *is* a weight matrix —
+  so repeated GEMMs stream only the *activation* columns while the weights
+  stay resident (weight-stationary operation, the paper's steady-state
+  driving cost; a program's microcode re-INITs every working column it
+  reads and never writes operand columns, so reuse is bit-exact — asserted
+  by the test suite).  :func:`matmul_int` (and therefore the ``pim_sim``
+  linear) routes through a process-wide session pool, so PIM-mode decode
+  pays the full state upload once per (artifact, weight), not once per
+  token.
 * :func:`mode` / :func:`current_mode` — an explicit, exception-safe context
   manager selecting how ``models.layers.linear`` lowers a matmul
   (``"xla"`` | ``"quant"`` | ``"pim_sim"``), replacing the old
@@ -57,6 +68,8 @@ __all__ = [
     "backends",
     "execute",
     "execute_state",
+    "ExecutionSession",
+    "session_for",
     "matmul_int",
     "sim_linear",
     "mode",
@@ -145,6 +158,11 @@ class CacheInfo:
     misses: int
     builds: int
     size: int
+    # backend-level execution counters (ExecutionSession): how many executes
+    # reused resident crossbar state (streaming only activation columns —
+    # the weights were already resident) vs paid a cold full-state upload.
+    exec_hits: int = 0
+    exec_uploads: int = 0
 
 
 _cache: Dict[Tuple, CompiledPim] = {}
@@ -212,15 +230,21 @@ def compile_matmul(n_terms: int, n_bits: int = 8, *, model: str = "minimal",
 
 def cache_info() -> CacheInfo:
     with _cache_lock:
-        return CacheInfo(hits=_hits, misses=_misses, builds=_builds,
+        info = CacheInfo(hits=_hits, misses=_misses, builds=_builds,
                          size=len(_cache))
+    with _session_lock:
+        return dataclasses.replace(info, exec_hits=_exec_hits,
+                                   exec_uploads=_exec_uploads)
 
 
 def clear_cache() -> None:
-    global _hits, _misses, _builds
+    global _hits, _misses, _builds, _exec_hits, _exec_uploads
     with _cache_lock:
         _cache.clear()
         _hits = _misses = _builds = 0
+    with _session_lock:
+        _sessions.clear()
+        _exec_hits = _exec_uploads = 0
 
 
 # ==========================================================================
@@ -330,20 +354,9 @@ def execute_state(state, microcode, *, backend: str = "scan", **kw):
 # execution front-end
 # ==========================================================================
 
-def execute(artifact: CompiledPim, x: np.ndarray, w: np.ndarray, *,
-            backend: str = "scan", rows_per_crossbar: int = 256,
-            **backend_kw) -> np.ndarray:
-    """Integer GEMM through a compiled artifact: (M, K) x (O, K) -> (M, O).
-
-    Each (m, o) output is one simulator row running ``artifact``'s dot
-    program; the (m, o) grid is packed 32 rows/word and split across
-    crossbars (the paper's rows x crossbars way-parallelism).  Exact for
-    unsigned operands up to ``artifact.n_bits`` bits; returns uint64.
-    """
-    from repro.pim import executor as ex
-
-    x = np.asarray(x)
-    w = np.asarray(w)
+def _grid_shape(artifact: CompiledPim, x: np.ndarray, w: np.ndarray,
+                rows_per_crossbar: int) -> Tuple[int, int, int, int, int]:
+    """Validate operands; return ``(M, O, K, n_cb, total)`` of the row grid."""
     M, K = x.shape
     O, K2 = w.shape
     if K != K2:
@@ -351,42 +364,179 @@ def execute(artifact: CompiledPim, x: np.ndarray, w: np.ndarray, *,
     if K != artifact.n_terms:
         raise ValueError(
             f"artifact compiled for {artifact.n_terms} terms, got K={K}")
-
     total = M * O
-    xs = np.repeat(x, O, axis=0)      # (M*O, K)
-    ws = np.tile(w, (M, 1))           # (M*O, K)
     n_cb = (total + rows_per_crossbar - 1) // rows_per_crossbar
-    pad = n_cb * rows_per_crossbar - total
+    return M, O, K, n_cb, total
+
+
+def _pack_grid(grid: np.ndarray, n_cb: int, rows_per_crossbar: int
+               ) -> np.ndarray:
+    """(M*O, K) operand rows -> (n_cb, rows_per_crossbar, K), zero-padded to
+    whole crossbars (the paper's rows x crossbars way-parallelism)."""
+    pad = n_cb * rows_per_crossbar - grid.shape[0]
     if pad:
-        xs = np.pad(xs, ((0, pad), (0, 0)))
-        ws = np.pad(ws, ((0, pad), (0, 0)))
-    xs = xs.reshape(n_cb, rows_per_crossbar, K)
-    ws = ws.reshape(n_cb, rows_per_crossbar, K)
+        grid = np.pad(grid, ((0, pad), (0, 0)))
+    return grid.reshape(n_cb, rows_per_crossbar, grid.shape[-1])
 
-    if backend == "numpy":
-        # keep the whole round trip jax-free (callback-safe, see
-        # _numpy_interpret)
-        w_words = (rows_per_crossbar + 31) // 32
-        state = np.zeros((n_cb, artifact.n_cols, w_words), np.uint32)
 
-        def write(cols, values):
-            values = np.asarray(values, np.uint64)
-            for bit, c in enumerate(cols):
-                state[:, c, :] = ex.pack_rows(
-                    (values >> np.uint64(bit)) & np.uint64(1))
+_sessions: Dict[Tuple, "ExecutionSession"] = {}
+_session_lock = threading.Lock()
+_exec_hits = 0
+_exec_uploads = 0
 
-        for i in range(K):
-            write(artifact.x_cols[i], xs[:, :, i])
-            write(artifact.w_cols[i], ws[:, :, i])
-    else:
-        state = ex.blank_state(n_cb, artifact.n_cols, rows_per_crossbar)
-        for i in range(K):
-            state = ex.write_numbers(state, artifact.x_cols[i], xs[:, :, i])
-            state = ex.write_numbers(state, artifact.w_cols[i], ws[:, :, i])
-    state = execute_state(state, artifact.microcode, backend=backend,
-                          **backend_kw)
-    acc = ex.read_numbers(state, artifact.acc_cols, rows_per_crossbar)
-    return acc.reshape(-1)[:total].reshape(M, O)
+
+class ExecutionSession:
+    """Persistent crossbar execution for one compiled artifact.
+
+    Resident state is kept per ``(geometry, weight)`` — a crossbar array in
+    real PIM *is* a weight matrix, so each distinct weight gets its own
+    resident copy (bounded by ``max_resident``, LRU-evicted).  The first
+    ``execute`` against a weight pays a full state upload (a *cold
+    upload*); every later call with that weight reuses the post-execution
+    state and streams only the activation columns — the weights stay
+    resident in the crossbar, exactly the serving decode steady state the
+    ROADMAP's "batched/persistent" item describes.  Reuse is bit-exact
+    because every dot/matmul program INITs each working column before
+    reading it, and never writes its operand columns (verified by
+    ``tests/test_engine_session.py``).
+
+    ``max_resident`` bounds the resident set (LRU eviction).  It is sized
+    for the simulator's tiny-shape domain; a cyclic access pattern larger
+    than the cap has a 0% hit rate and degenerates to cold uploads — raise
+    it (via :func:`session_for`) before concluding the persistent path is
+    broken.  Instances also feed the process-wide ``cache_info`` execution
+    counters (``exec_hits`` / ``exec_uploads``).  Not thread-safe; share
+    across threads only with external locking (the pooled sessions from
+    :func:`session_for` are fine under the ``pure_callback`` host route,
+    which serializes per device).
+    """
+
+    def __init__(self, artifact: CompiledPim, *, backend: str = "scan",
+                 rows_per_crossbar: int = 256, max_resident: int = 1024,
+                 **backend_kw):
+        self.artifact = artifact
+        self.backend = backend
+        self.rows_per_crossbar = rows_per_crossbar
+        self.max_resident = max_resident
+        self.backend_kw = backend_kw
+        self._states: Dict[Tuple, "object"] = {}  # (geometry, w bytes)
+        self.uploads = 0
+        self.hits = 0
+
+    def _count(self, cold: bool) -> None:
+        global _exec_hits, _exec_uploads
+        with _session_lock:
+            if cold:
+                _exec_uploads += 1
+            else:
+                _exec_hits += 1
+
+    def reset(self) -> None:
+        """Drop resident state (next execute pays a cold upload again)."""
+        self._states.clear()
+
+    def execute(self, x: np.ndarray, w: np.ndarray) -> np.ndarray:
+        """Integer GEMM ``(M, K) x (O, K) -> (M, O)`` on resident state.
+
+        Exact for unsigned operands up to ``artifact.n_bits`` bits;
+        returns uint64.
+        """
+        from repro.pim import executor as ex
+
+        art = self.artifact
+        rows = self.rows_per_crossbar
+        x = np.asarray(x)
+        w = np.asarray(w)
+        M, O, K, n_cb, total = _grid_shape(art, x, w, rows)
+
+        # key resident state by the weight *bytes* (native dtype, no
+        # conversion copy): dict equality compares them exactly, so a hash
+        # collision can never silently reuse another weight's crossbar state
+        key = (n_cb, M, O, w.dtype.str, w.tobytes())
+        state = self._states.pop(key, None)      # pop: re-insert moves to MRU
+        cold = state is None
+
+        xs = _pack_grid(np.repeat(x, O, axis=0), n_cb, rows)
+        # the tiled weight grid is only consumed on a cold upload — warm
+        # (weight-stationary) calls never build it
+        ws = _pack_grid(np.tile(w, (M, 1)), n_cb, rows) if cold else None
+
+        if self.backend == "numpy":
+            # jax-free round trip (callback-safe, see _numpy_interpret)
+            if cold:
+                w_words = (rows + 31) // 32
+                state = np.zeros((n_cb, art.n_cols, w_words), np.uint32)
+            else:
+                state = np.array(state, copy=True)
+
+            def write(cols, values):
+                values = np.asarray(values, np.uint64)
+                for bit, c in enumerate(cols):
+                    state[:, c, :] = ex.pack_rows(
+                        (values >> np.uint64(bit)) & np.uint64(1))
+
+            for i in range(K):
+                write(art.x_cols[i], xs[:, :, i])
+                if cold:
+                    write(art.w_cols[i], ws[:, :, i])
+        else:
+            if cold:
+                state = ex.blank_state(n_cb, art.n_cols, rows)
+            for i in range(K):
+                state = ex.write_numbers(state, art.x_cols[i], xs[:, :, i])
+                if cold:
+                    state = ex.write_numbers(state, art.w_cols[i],
+                                             ws[:, :, i])
+        state = execute_state(state, art.microcode, backend=self.backend,
+                              **self.backend_kw)
+        self._states[key] = state
+        while len(self._states) > self.max_resident:
+            self._states.pop(next(iter(self._states)))   # LRU eviction
+        if cold:
+            self.uploads += 1
+        else:
+            self.hits += 1                       # resident weights: x-only
+        self._count(cold)
+        acc = ex.read_numbers(state, art.acc_cols, rows)
+        return acc.reshape(-1)[:total].reshape(M, O)
+
+
+def session_for(artifact: CompiledPim, *, backend: str = "scan",
+                rows_per_crossbar: int = 256,
+                max_resident: Optional[int] = None) -> ExecutionSession:
+    """The process-wide persistent session for ``(artifact, backend,
+    rows_per_crossbar)`` — created on first use, then reused so repeated
+    GEMMs with the same artifact keep their crossbar state resident.
+    ``max_resident`` applies on creation (and raises the cap of an
+    existing session).  ``clear_cache()`` drops all pooled sessions."""
+    key = (artifact.key, backend, rows_per_crossbar)
+    with _session_lock:
+        sess = _sessions.get(key)
+        if sess is None:
+            sess = ExecutionSession(artifact, backend=backend,
+                                    rows_per_crossbar=rows_per_crossbar,
+                                    **({} if max_resident is None
+                                       else {"max_resident": max_resident}))
+            _sessions[key] = sess
+        elif max_resident is not None:
+            sess.max_resident = max(sess.max_resident, max_resident)
+        return sess
+
+
+def execute(artifact: CompiledPim, x: np.ndarray, w: np.ndarray, *,
+            backend: str = "scan", rows_per_crossbar: int = 256,
+            **backend_kw) -> np.ndarray:
+    """One-shot integer GEMM: (M, K) x (O, K) -> (M, O).
+
+    Allocates fresh crossbar state every call (counted as a cold upload).
+    Steady-state callers — anything executing the same artifact repeatedly —
+    should hold an :class:`ExecutionSession` (or go through
+    :func:`session_for` / :func:`matmul_int`, which pool sessions) instead.
+    """
+    sess = ExecutionSession(artifact, backend=backend,
+                            rows_per_crossbar=rows_per_crossbar,
+                            **backend_kw)
+    return sess.execute(x, w)
 
 
 def matmul_int(x: np.ndarray, w: np.ndarray, n_bits: int = 8, *,
@@ -396,10 +546,13 @@ def matmul_int(x: np.ndarray, w: np.ndarray, n_bits: int = 8, *,
     """Compile-and-execute convenience: bit-exact integer GEMM.
 
     The compile step is cached — calling twice with the same (K, n_bits,
-    model) builds the gate program exactly once.  Inner dimensions longer
-    than one row's column budget are split into chunked GEMMs (at most two
-    distinct chunk sizes, both cached) whose uint64 partials are summed
-    exactly on the host — so any K works, not just what fits one row.
+    model) builds the gate program exactly once.  Execution goes through
+    the pooled :class:`ExecutionSession` for the artifact, so repeated
+    calls (the ``pim_sim`` decode loop) keep crossbar state resident and
+    stream only operand columns.  Inner dimensions longer than one row's
+    column budget are split into chunked GEMMs (at most two distinct chunk
+    sizes, both cached) whose uint64 partials are summed exactly on the
+    host — so any K works, not just what fits one row.
     """
     from repro.pim.matmul import max_dot_terms
 
@@ -411,8 +564,9 @@ def matmul_int(x: np.ndarray, w: np.ndarray, n_bits: int = 8, *,
     def run(xs, ws):
         artifact = compile_matmul(xs.shape[1], n_bits, model=model,
                                   accumulate=accumulate)
-        return execute(artifact, xs, ws, backend=backend,
-                       rows_per_crossbar=rows_per_crossbar)
+        return session_for(artifact, backend=backend,
+                           rows_per_crossbar=rows_per_crossbar
+                           ).execute(xs, ws)
 
     if K <= chunk:
         return run(x, w)

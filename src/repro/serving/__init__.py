@@ -1,0 +1,25 @@
+"""repro.serving — continuous-batching decode runtime.
+
+The serving layer above the model/engine stack: a FIFO admission queue
+(``queue``), a slot-indexed persistent KV-cache pool (``cache``), the
+continuous-batching scheduler whose jitted decode step never recompiles as
+requests churn (``scheduler``), and per-request/aggregate serving metrics
+(``metrics``).  ``launch/serve.py`` is a thin CLI over this package.
+"""
+from repro.serving.cache import CachePool
+from repro.serving.metrics import RequestMetrics, ServingMetrics
+from repro.serving.queue import (AdmissionQueue, Request, make_request,
+                                 synthetic_requests)
+from repro.serving.scheduler import Scheduler, ServingConfig
+
+__all__ = [
+    "AdmissionQueue",
+    "CachePool",
+    "Request",
+    "RequestMetrics",
+    "Scheduler",
+    "ServingConfig",
+    "ServingMetrics",
+    "make_request",
+    "synthetic_requests",
+]

@@ -1,0 +1,84 @@
+"""Slot-indexed decode-cache pool for continuous batching.
+
+The pool is the full decode-cache tree of ``models.model.cache_specs`` at
+``(max_batch, max_len)`` — allocated **once**, never reshaped.  Requests
+come and go by *slot index*: admit writes a prefill cache into slot ``s``
+with ``lax.dynamic_update_slice_in_dim`` on the batch dim, evict zeroes it
+the same way.  Both are jitted once with the slot as a traced scalar, so a
+churning request mix never recompiles anything.
+
+Under a mesh the pool is placed by ``dist.cache_pspecs(...,
+batch_over_dp=False)``: heads shard over "model", but the slot dim stays
+replicated — continuous batching touches arbitrary slots every step, and a
+DP-sharded slot dim would make each admit a cross-device scatter.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import partitioning as dpart
+from repro.models import model_lib as M
+from repro.models.config import ModelConfig
+
+__all__ = ["CachePool"]
+
+
+class CachePool:
+    """Decode caches for ``max_batch`` slots of up to ``max_len`` tokens.
+
+    ``caches`` is the live cache tree threaded through the jitted decode
+    step; the scheduler re-binds it after every step.  ``assign`` expects a
+    single-request prefill cache (batch dim 1) produced at the pool's
+    ``max_len`` capacity (i.e. with ``cfg.max_seq_len == max_len``).
+    """
+
+    def __init__(self, cfg: ModelConfig, max_batch: int,
+                 max_len: Optional[int] = None, *, mesh=None):
+        self.max_batch = max_batch
+        self.max_len = max_len or cfg.max_seq_len
+        specs = M.cache_specs(cfg, max_batch, self.max_len)
+        self.caches: Dict[str, Any] = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        if mesh is not None:
+            self.caches = jax.device_put(self.caches, dpart.tree_shardings(
+                dpart.cache_pspecs(self.caches, mesh, batch_over_dp=False),
+                mesh))
+
+        def assign(pool, request_cache, slot):
+            return jax.tree.map(
+                lambda c, r: jax.lax.dynamic_update_slice_in_dim(
+                    c, r.astype(c.dtype), slot, axis=1),
+                pool, request_cache)
+
+        def evict(pool, slot):
+            return jax.tree.map(
+                lambda c: jax.lax.dynamic_update_slice_in_dim(
+                    c, jnp.zeros(c.shape[:1] + (1,) + c.shape[2:], c.dtype),
+                    slot, axis=1),
+                pool)
+
+        def read(pool, slot):
+            return jax.tree.map(
+                lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
+                pool)
+
+        self._assign = jax.jit(assign)
+        self._evict = jax.jit(evict)
+        self._read = jax.jit(read)
+
+    def assign(self, slot: int, request_cache) -> None:
+        """Install a (batch-1) prefill cache into ``slot``."""
+        self.caches = self._assign(self.caches, request_cache,
+                                   jnp.int32(slot))
+
+    def evict(self, slot: int) -> None:
+        """Zero ``slot`` (logical free; keeps stale KV out of the pool)."""
+        self.caches = self._evict(self.caches, jnp.int32(slot))
+
+    def read_slot(self, slot: int):
+        """The (batch-1) cache view of ``slot`` — tests/inspection."""
+        return self._read(self.caches, jnp.int32(slot))

@@ -1,0 +1,106 @@
+"""Serving metrics: per-request latency and aggregate throughput.
+
+Per request the runtime records the standard serving quantities —
+TTFT (arrival to first token, which the scheduler emits at prefill) and
+TPOT (mean gap between subsequent tokens) — plus the aggregate
+tokens/second over the busy window and queue-depth samples taken once per
+scheduler step.  Everything is on the scheduler's injected clock, so tests
+drive these deterministically with a fake clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+__all__ = ["RequestMetrics", "ServingMetrics"]
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    rid: int
+    arrival_time: float
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    last_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    n_tokens: int = 0
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token: arrival -> first emitted token."""
+        if self.first_token_time is None:
+            return math.nan
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token after the first (decode cadence)."""
+        if self.last_token_time is None or self.n_tokens < 2:
+            return math.nan
+        return ((self.last_token_time - self.first_token_time)
+                / (self.n_tokens - 1))
+
+    @property
+    def queue_wait(self) -> float:
+        if self.admit_time is None:
+            return math.nan
+        return self.admit_time - self.arrival_time
+
+
+class ServingMetrics:
+    """Aggregates RequestMetrics + queue-depth samples into a summary."""
+
+    def __init__(self):
+        self.requests: Dict[int, RequestMetrics] = {}
+        self.queue_depth_samples: List[int] = []
+        self.active_samples: List[int] = []
+
+    def on_submit(self, rid: int, now: float) -> None:
+        self.requests[rid] = RequestMetrics(rid=rid, arrival_time=now)
+
+    def on_admit(self, rid: int, now: float) -> None:
+        self.requests[rid].admit_time = now
+
+    def on_token(self, rid: int, now: float) -> None:
+        r = self.requests[rid]
+        if r.first_token_time is None:
+            r.first_token_time = now
+        r.last_token_time = now
+        r.n_tokens += 1
+
+    def on_finish(self, rid: int, now: float) -> None:
+        self.requests[rid].finish_time = now
+
+    def sample_queue(self, depth: int, active: int) -> None:
+        self.queue_depth_samples.append(depth)
+        self.active_samples.append(active)
+
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _mean(xs: List[float]) -> float:
+        xs = [x for x in xs if not math.isnan(x)]
+        return sum(xs) / len(xs) if xs else math.nan
+
+    def summary(self) -> Dict[str, float]:
+        rs = list(self.requests.values())
+        done = [r for r in rs if r.finish_time is not None]
+        total_tokens = sum(r.n_tokens for r in rs)
+        t0 = min((r.admit_time for r in rs if r.admit_time is not None),
+                 default=math.nan)
+        t1 = max((r.finish_time for r in done), default=math.nan)
+        busy = t1 - t0 if not (math.isnan(t0) or math.isnan(t1)) else math.nan
+        return {
+            "n_requests": len(rs),
+            "n_finished": len(done),
+            "total_tokens": total_tokens,
+            "tokens_per_s": (total_tokens / busy
+                             if busy and not math.isnan(busy) else math.nan),
+            "mean_ttft_s": self._mean([r.ttft for r in rs]),
+            "mean_tpot_s": self._mean([r.tpot for r in rs]),
+            "mean_queue_wait_s": self._mean([r.queue_wait for r in rs]),
+            "max_queue_depth": max(self.queue_depth_samples, default=0),
+            "mean_active_slots": self._mean(
+                [float(a) for a in self.active_samples]),
+        }

@@ -1,0 +1,102 @@
+"""Request admission: the FIFO queue feeding the continuous-batching
+scheduler.
+
+A :class:`Request` is one decode job — a prompt, a generation budget, and
+an arrival time.  The :class:`AdmissionQueue` is strictly FIFO in submit
+order; ``pop(now)`` additionally respects arrival times, so a synthetic
+(e.g. Poisson) trace can be loaded up front and replayed against a clock:
+the head request stays queued until its arrival time has passed.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Deque, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["Request", "AdmissionQueue", "synthetic_requests"]
+
+_rid_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One decode request.
+
+    ``max_new_tokens`` counts every generated token, including the first
+    one emitted by prefill.  ``arrival_time`` is on the scheduler's clock
+    (``time.monotonic`` unless injected).
+    """
+
+    rid: int
+    prompt: np.ndarray              # (plen,) int32 token ids
+    max_new_tokens: int
+    arrival_time: float = 0.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"request {self.rid}: max_new_tokens must be >= 1")
+
+
+def make_request(prompt, max_new_tokens: int, *, rid: Optional[int] = None,
+                 arrival_time: float = 0.0) -> Request:
+    """Build a request, auto-assigning a process-unique rid if not given."""
+    return Request(rid=next(_rid_counter) if rid is None else rid,
+                   prompt=prompt, max_new_tokens=max_new_tokens,
+                   arrival_time=arrival_time)
+
+
+class AdmissionQueue:
+    """FIFO admission queue (submit order; arrival-time gated pops)."""
+
+    def __init__(self):
+        self._q: Deque[Request] = collections.deque()
+
+    def submit(self, request: Request) -> None:
+        self._q.append(request)
+
+    def pop(self, now: Optional[float] = None) -> Optional[Request]:
+        """The head request, if it has arrived by ``now`` (None: always)."""
+        if not self._q:
+            return None
+        if now is not None and self._q[0].arrival_time > now:
+            return None
+        return self._q.popleft()
+
+    def peek(self) -> Optional[Request]:
+        return self._q[0] if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __iter__(self) -> Iterator[Request]:
+        return iter(self._q)
+
+
+def synthetic_requests(n: int, *, vocab_size: int, prompt_lens: Sequence[int],
+                       max_new_tokens: int = 16, rate: float = 0.0,
+                       seed: int = 0, start_time: float = 0.0
+                       ) -> List[Request]:
+    """A deterministic synthetic trace: random prompts, Poisson arrivals.
+
+    ``rate`` is the arrival rate in requests/second (exponential
+    inter-arrival gaps); 0 puts every request at ``start_time`` (a closed
+    batch).  Prompt lengths cycle through ``prompt_lens``.
+    """
+    rng = np.random.default_rng(seed)
+    t = start_time
+    out: List[Request] = []
+    for i in range(n):
+        if rate > 0 and i > 0:
+            t += float(rng.exponential(1.0 / rate))
+        plen = int(prompt_lens[i % len(prompt_lens)])
+        out.append(make_request(
+            rng.integers(0, vocab_size, size=(plen,), dtype=np.int64),
+            max_new_tokens, arrival_time=t))
+    return out

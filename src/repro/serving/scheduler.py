@@ -1,0 +1,246 @@
+"""Continuous-batching decode scheduler.
+
+The runtime keeps one fixed-size decode batch of ``max_batch`` *slots*
+stepping together under a single jitted ``decode_step_slots`` — per-slot
+positions, per-slot ``cache_len`` masks, and an active-slot mask mean the
+step's shapes never change, so steady-state decode **never recompiles** no
+matter how requests churn (``decode_traces`` counts retraces; tests pin it
+to 1).  Each scheduler step:
+
+1. *backfill* — every free slot is filled from the admission queue
+   (lowest-numbered slot first, FIFO requests): the prompt is right-padded
+   to a ``prompt_bucket`` multiple, prefilled in one shot (logits read at
+   the true last token via ``prefill(last_index=...)``), the resulting
+   cache written into the slot of the persistent :class:`CachePool`, and
+   the first token emitted — that's the request's TTFT.
+2. *decode* — one batched step advances every active slot by one token;
+   finished slots (budget exhausted or EOS) are evicted and become
+   backfill targets on the next step.
+
+Bucketed prefill retraces once per distinct bucket length (a handful of
+compiles, amortized over the run) and is exact for attention stacks; for
+recurrent blocks (Mamba/xLSTM) set ``prompt_bucket=1`` so prompts run
+unpadded.  Under ``pim_mode="pim_sim"`` the decode step's crossbar GEMMs
+run through the engine's persistent :class:`ExecutionSession` pool:
+crossbar state is uploaded once per artifact and only operand columns
+stream per token.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model_lib as M
+from repro.models.config import ModelConfig
+from repro.serving.cache import CachePool
+from repro.serving.metrics import ServingMetrics
+from repro.serving.queue import AdmissionQueue, Request, make_request
+
+__all__ = ["ServingConfig", "Scheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Knobs of the continuous-batching runtime.  Per-slot cache capacity
+    is ``cfg.max_seq_len`` (prefill emits caches at exactly that capacity,
+    so the pool cannot be sized independently)."""
+
+    max_batch: int = 4          # decode slots
+    prompt_bucket: int = 16     # prompts pad up to a multiple of this
+    pad_id: int = 0
+    eos_id: Optional[int] = None   # stop early on this token (None: never)
+
+
+class Scheduler:
+    """Continuous-batching scheduler over a persistent cache pool."""
+
+    def __init__(self, params, cfg: ModelConfig, scfg: ServingConfig, *,
+                 mesh=None, clock=time.monotonic):
+        if scfg.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        # Capability boundaries (explicit errors beat silent garbage):
+        # sliding-window caches are ring buffers whose prefill capacity
+        # min(prompt, window) mismatches the pool's min(max_len, window) for
+        # short prompts, and bucket padding lands *inside* the attention
+        # window — serving them needs the ROADMAP's windowed/paged pool.
+        if cfg.sliding_window:
+            raise NotImplementedError(
+                f"{cfg.name}: sliding-window attention is not servable by "
+                "the slot pool yet (prefill ring capacity depends on prompt "
+                "length); see ROADMAP 'paged attention for the cache pool'")
+        # enc-dec / vision prefill needs frames/patches carried per request
+        # and their cross-attention caches pooled; not wired up yet.
+        if cfg.is_encoder_decoder or cfg.vision_dim:
+            raise NotImplementedError(
+                f"{cfg.name}: multimodal serving (frames/patches on the "
+                "request) is a ROADMAP follow-on; decoder-only stacks only")
+        # recurrent state folds right-padding into the prefix: bucketed
+        # prefill would silently change generations
+        if cfg.has_recurrent_blocks and scfg.prompt_bucket != 1:
+            raise ValueError(
+                f"{cfg.name}: SSM/xLSTM blocks require prompt_bucket=1 "
+                "(padding folds into the recurrent state)")
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.clock = clock
+        self.queue = AdmissionQueue()
+        self.metrics = ServingMetrics()
+        self.pool = CachePool(cfg, scfg.max_batch, cfg.max_seq_len,
+                              mesh=mesh)
+
+        B = scfg.max_batch
+        self._slot_rid = np.full(B, -1, np.int64)
+        self._pos = np.zeros(B, np.int32)
+        self._tokens = np.zeros((B, 1), np.int32)
+        self._remaining = np.zeros(B, np.int64)
+        self._outputs: Dict[int, List[int]] = {}
+        self.decode_traces = 0      # python-body executions == jit retraces
+
+        def _step(p, tokens, pos, active, caches):
+            self.decode_traces += 1
+            return M.decode_step_slots(p, tokens, pos, active, caches, cfg)
+
+        self._decode = jax.jit(_step)
+        self._prefill = jax.jit(
+            lambda p, toks, li: M.prefill(p, {"tokens": toks}, cfg,
+                                          last_index=li))
+
+    # ------------------------------------------------------------------
+
+    @property
+    def active_slots(self) -> np.ndarray:
+        return self._slot_rid >= 0
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active_slots.sum())
+
+    def submit(self, prompt, max_new_tokens: int, *,
+               arrival_time: Optional[float] = None) -> int:
+        """Enqueue one request; returns its rid."""
+        req = make_request(prompt, max_new_tokens,
+                           arrival_time=self.clock() if arrival_time is None
+                           else arrival_time)
+        return self.submit_request(req)
+
+    def submit_request(self, req: Request) -> int:
+        plen = req.prompt.shape[0]
+        if plen + req.max_new_tokens > self.pool.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {plen} + budget "
+                f"{req.max_new_tokens} exceeds cache capacity "
+                f"{self.pool.max_len}")
+        self.queue.submit(req)
+        self.metrics.on_submit(req.rid, req.arrival_time)
+        return req.rid
+
+    # ------------------------------------------------------------------
+
+    def _bucket(self, plen: int) -> int:
+        bq = max(1, self.scfg.prompt_bucket)
+        return min(((plen + bq - 1) // bq) * bq, self.pool.max_len)
+
+    def _finish(self, slot: int, now: float) -> None:
+        self.metrics.on_finish(int(self._slot_rid[slot]), now)
+        self._slot_rid[slot] = -1
+        self.pool.evict(slot)
+
+    def _admit(self) -> List[Tuple[int, int]]:
+        """Backfill free slots from the queue; returns (rid, token) firsts."""
+        emitted: List[Tuple[int, int]] = []
+        for slot in np.flatnonzero(~self.active_slots):
+            req = self.queue.pop(self.clock())
+            if req is None:
+                break
+            plen = req.prompt.shape[0]
+            bucket = self._bucket(plen)
+            toks = np.full((1, bucket), self.scfg.pad_id, np.int32)
+            toks[0, :plen] = req.prompt
+            logits, cache = self._prefill(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([plen - 1], jnp.int32))
+            first = int(np.asarray(jnp.argmax(logits, -1))[0])
+            now = self.clock()
+            self.metrics.on_admit(req.rid, now)
+            self.metrics.on_token(req.rid, now)
+            self._outputs[req.rid] = [first]
+            emitted.append((req.rid, first))
+            done = (req.max_new_tokens <= 1
+                    or first == self.scfg.eos_id)
+            if done:
+                # finished at admit: never touches a slot (the cache write
+                # would only leave stale KV in a still-free slot)
+                self.metrics.on_finish(req.rid, now)
+                continue
+            self.pool.assign(int(slot), cache)
+            self._slot_rid[slot] = req.rid
+            self._tokens[slot, 0] = first
+            self._pos[slot] = plen
+            self._remaining[slot] = req.max_new_tokens - 1
+        return emitted
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One scheduler step: backfill, then one batched decode step.
+
+        Returns the (rid, token) pairs emitted this step.
+        """
+        emitted = self._admit()
+        active = self.active_slots
+        if active.any():
+            next_tok, _, new_caches = self._decode(
+                self.params, jnp.asarray(self._tokens),
+                jnp.asarray(self._pos), jnp.asarray(active),
+                self.pool.caches)
+            self.pool.caches = new_caches
+            toks = np.asarray(next_tok)
+            now = self.clock()
+            for slot in np.flatnonzero(active):
+                rid = int(self._slot_rid[slot])
+                tok = int(toks[slot, 0])
+                self._outputs[rid].append(tok)
+                self.metrics.on_token(rid, now)
+                emitted.append((rid, tok))
+                self._tokens[slot, 0] = tok
+                self._pos[slot] += 1
+                self._remaining[slot] -= 1
+                if (self._remaining[slot] <= 0
+                        or tok == self.scfg.eos_id):
+                    self._finish(int(slot), now)
+        self.metrics.sample_queue(len(self.queue), self.n_active)
+        return emitted
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Step until the queue drains and every slot finishes.
+
+        Returns rid -> generated tokens (prefill's first token included).
+        With an injected clock that does not advance on its own, drive
+        ``step()`` manually instead of waiting on future arrivals here —
+        ``run`` detects a non-advancing clock and raises rather than spin.
+        """
+        stalls = 0
+        while len(self.queue) or self.active_slots.any():
+            progressed = bool(self.step())
+            if progressed or self.active_slots.any():
+                stalls = 0
+                continue
+            # idle: head request hasn't arrived yet on this clock
+            head = self.queue.peek()
+            if head is None:
+                continue
+            before = self.clock()
+            time.sleep(min(max(head.arrival_time - before, 0.0), 1e-3))
+            if self.clock() == before:
+                stalls += 1
+                if stalls > 1000:
+                    raise RuntimeError(
+                        "run(): clock is not advancing while requests wait "
+                        "to arrive; with an injected test clock, advance it "
+                        "and call step() yourself")
+        return {rid: np.asarray(toks, np.int32)
+                for rid, toks in self._outputs.items()}

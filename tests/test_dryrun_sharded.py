@@ -122,6 +122,51 @@ def test_sharded_moe_forward_runs_shard_map_path(mesh):
     np.testing.assert_allclose(got, want, rtol=2e-3)
 
 
+def test_parse_collectives_pod_boundary_term():
+    """The multi-pod wire model: groups spanning pods report the byte
+    fraction riding inter-pod links; intra-pod groups report zero."""
+    line = ("  %r = f32[1024]{0} all-reduce(f32[1024]{0} %p0), "
+            "replica_groups=[1,512]<=[512], to_apply=%add")
+    wire = 2.0 * 4096 * 511 / 512
+    colls = dryrun.parse_collectives(line, pod_size=256)
+    ar = colls["all-reduce"]
+    assert ar["wire_bytes"] == pytest.approx(wire)
+    # 512-device ring over 2 pods: 2 of 512 hops cross the boundary
+    assert ar["cross_pod_bytes"] == pytest.approx(wire * 2 / 512)
+    # a group fitting one pod pays nothing at the boundary
+    assert dryrun.parse_collectives(line, pod_size=512)[
+        "all-reduce"]["cross_pod_bytes"] == 0.0
+    assert dryrun.parse_collectives(line)[
+        "all-reduce"]["cross_pod_bytes"] == 0.0
+    # the slower boundary links make the modeled time strictly larger
+    t_multi = dryrun.collective_time_s(colls)
+    t_single = dryrun.collective_time_s(dryrun.parse_collectives(line))
+    assert t_multi > t_single > 0.0
+
+
+def test_pod_boundary_term_on_real_multipod_hlo():
+    """CPU-scale 2x16x16 analogue: a (pod, data, model) mesh whose
+    all-reduce spans both pods must show cross-pod bytes when parsed with
+    the per-pod device count, and none with the whole-mesh count."""
+    from repro.launch.mesh import make_mesh
+
+    pmesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    pod_size = pmesh.size // pmesh.shape["pod"]
+    x = jnp.ones((8, 64), jnp.float32)
+    sharding = jax.sharding.NamedSharding(
+        pmesh, jax.sharding.PartitionSpec(("pod", "data", "model"), None))
+    fn = jax.jit(lambda a: a.sum(0), in_shardings=sharding,
+                 out_shardings=jax.sharding.NamedSharding(
+                     pmesh, jax.sharding.PartitionSpec()))
+    compiled = fn.lower(jax.device_put(x, sharding)).compile()
+    colls = dryrun.parse_collectives(compiled.as_text(), pod_size=pod_size)
+    assert colls, "expected a cross-device reduction in the HLO"
+    assert sum(c["cross_pod_bytes"] for c in colls.values()) > 0.0
+    no_cross = dryrun.parse_collectives(compiled.as_text(),
+                                        pod_size=pmesh.size)
+    assert sum(c["cross_pod_bytes"] for c in no_cross.values()) == 0.0
+
+
 def test_dp_only_policy_replicates_weights(mesh, small_model_config):
     cfg = small_model_config
     shape = ShapeSpec("tiny_train", S, B, "train")

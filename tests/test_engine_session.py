@@ -1,0 +1,169 @@
+"""ExecutionSession: persistent crossbar state, operand streaming, counters.
+
+The reuse contract (the ROADMAP's "batched/persistent engine execution"):
+crossbar state is uploaded once per (artifact, geometry) and later calls
+stream only operand columns — bit-exactly, because every program INITs each
+working column before reading it.  ``cache_info`` exposes the session
+counters so the persistent path is observable from tests and benchmarks.
+"""
+import numpy as np
+import pytest
+
+from repro.pim import engine
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    engine.clear_cache()
+    yield
+    engine.clear_cache()
+
+
+def _operands(rng, m, o, k, bits=8):
+    hi = 1 << bits
+    return (rng.integers(0, hi, size=(m, k), dtype=np.uint64),
+            rng.integers(0, hi, size=(o, k), dtype=np.uint64))
+
+
+def test_session_reuse_is_bit_exact_and_uploads_once():
+    """State uploads once per (artifact, weight) — the crossbar array IS
+    the weight matrix; later executes stream activations onto resident
+    state and match a fresh-state execution bit for bit."""
+    rng = np.random.default_rng(0)
+    art = engine.compile_dot(3, 8, model="minimal")
+    sess = engine.ExecutionSession(art, rows_per_crossbar=16)
+    x1, w = _operands(rng, 2, 4, 3)
+    x2, _ = _operands(rng, 2, 4, 3)
+    y1 = sess.execute(x1, w)
+    y2 = sess.execute(x2, w)                     # resident-state reuse
+    assert np.array_equal(y1.astype(object), x1.astype(object) @ w.T)
+    assert np.array_equal(y2.astype(object), x2.astype(object) @ w.T)
+    # reuse matches a cold, fresh-state execution exactly
+    assert np.array_equal(y2, engine.execute(art, x2, w,
+                                             rows_per_crossbar=16))
+    assert (sess.uploads, sess.hits) == (1, 1)
+    # a different weight matrix is a different crossbar array: new upload,
+    # and the first weight's state stays resident alongside it
+    _, w2 = _operands(rng, 2, 4, 3)
+    y3 = sess.execute(x1, w2)
+    assert np.array_equal(y3.astype(object), x1.astype(object) @ w2.T)
+    assert sess.uploads == 2
+    sess.execute(x2, w)                          # still warm
+    assert (sess.uploads, sess.hits) == (2, 2)
+
+
+def test_session_weight_stationary_streams_activations_only():
+    """Same weights (the decode steady state): one upload, then every call
+    is a hit that streams only activation columns; result stays exact."""
+    rng = np.random.default_rng(1)
+    art = engine.compile_dot(4, 8, model="minimal")
+    sess = engine.ExecutionSession(art, rows_per_crossbar=16)
+    _, w = _operands(rng, 2, 3, 4)
+    for i in range(3):
+        x, _ = _operands(rng, 2, 3, 4)
+        y = sess.execute(x, w)
+        assert np.array_equal(y.astype(object), x.astype(object) @ w.T), i
+    assert (sess.uploads, sess.hits) == (1, 2)
+    # changing the weights is a new crossbar array (upload), still exact
+    x, w2 = _operands(rng, 2, 3, 4)
+    assert np.array_equal(sess.execute(x, w2).astype(object),
+                          x.astype(object) @ w2.T)
+    assert (sess.uploads, sess.hits) == (2, 2)
+
+
+def test_session_lru_eviction_bounds_resident_states():
+    """Cyclic access over more weights than max_resident stays exact (it
+    just re-uploads); within the cap everything stays resident."""
+    rng = np.random.default_rng(6)
+    art = engine.compile_dot(2, 8, model="minimal")
+    sess = engine.ExecutionSession(art, rows_per_crossbar=16,
+                                   max_resident=2)
+    ws = [_operands(rng, 2, 2, 2)[1] for _ in range(3)]
+    x, _ = _operands(rng, 2, 2, 2)
+    for rnd in range(2):
+        for w in ws:                             # 3 weights, 2 slots
+            y = sess.execute(x, w)
+            assert np.array_equal(y.astype(object),
+                                  x.astype(object) @ w.T), rnd
+    assert len(sess._states) == 2
+    assert sess.hits == 0 and sess.uploads == 6  # cyclic > cap: all cold
+
+
+def test_session_new_geometry_pays_new_upload():
+    rng = np.random.default_rng(2)
+    art = engine.compile_dot(3, 8, model="minimal")
+    sess = engine.ExecutionSession(art, rows_per_crossbar=16)
+    x, w = _operands(rng, 2, 4, 3)
+    sess.execute(x, w)
+    xl, wl = _operands(rng, 8, 5, 3)             # more rows -> more crossbars
+    y = sess.execute(xl, wl)
+    assert np.array_equal(y.astype(object), xl.astype(object) @ wl.T)
+    assert sess.uploads == 2
+    sess.execute(x, w)                           # first geometry still warm
+    assert (sess.uploads, sess.hits) == (2, 1)
+
+
+@pytest.mark.parametrize("backend", ["scan", "numpy"])
+def test_session_backends_agree(backend):
+    rng = np.random.default_rng(3)
+    art = engine.compile_dot(3, 8, model="minimal")
+    sess = engine.ExecutionSession(art, backend=backend,
+                                   rows_per_crossbar=16)
+    x, w = _operands(rng, 3, 3, 3)
+    y1 = sess.execute(x, w)
+    x2, _ = _operands(rng, 3, 3, 3)
+    y2 = sess.execute(x2, w)                     # weight-stationary hit
+    assert np.array_equal(y1.astype(object), x.astype(object) @ w.T)
+    assert np.array_equal(y2.astype(object), x2.astype(object) @ w.T)
+    assert (sess.uploads, sess.hits) == (1, 1)
+
+
+def test_matmul_int_pools_sessions_and_cache_info_reports():
+    """The pim_sim host path (matmul_int) must reuse pooled sessions: one
+    upload per artifact across repeated calls, observable via cache_info."""
+    rng = np.random.default_rng(4)
+    x, w = _operands(rng, 2, 3, 4)
+    engine.matmul_int(x, w, 8, model="minimal", rows_per_crossbar=16)
+    info1 = engine.cache_info()
+    assert info1.exec_uploads == 1 and info1.exec_hits == 0
+    engine.matmul_int(x, w, 8, model="minimal", rows_per_crossbar=16)
+    info2 = engine.cache_info()
+    assert info2.exec_uploads == 1, "second call must not re-upload state"
+    assert info2.exec_hits == 1                  # weights stayed resident
+
+
+def test_session_for_returns_same_session_until_cleared():
+    art = engine.compile_dot(2, 8, model="minimal")
+    s1 = engine.session_for(art, rows_per_crossbar=16)
+    assert engine.session_for(art, rows_per_crossbar=16) is s1
+    assert engine.session_for(art, rows_per_crossbar=32) is not s1
+    engine.clear_cache()
+    art2 = engine.compile_dot(2, 8, model="minimal")
+    assert engine.session_for(art2, rows_per_crossbar=16) is not s1
+    info = engine.cache_info()
+    assert (info.exec_hits, info.exec_uploads) == (0, 0)
+
+
+def test_sim_linear_decode_loop_uploads_once():
+    """A pim_sim 'decode loop' — repeated jitted linears with the same
+    weights — pays exactly one crossbar upload, then streams activations."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.layers import linear
+
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(2, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))
+    with engine.mode("pim_sim"):
+        f = jax.jit(lambda a, b: linear(a, b))
+        first = np.asarray(f(x, w))
+    uploads_after_first = engine.cache_info().exec_uploads
+    with engine.mode("pim_sim"):
+        for _ in range(3):
+            out = np.asarray(f(x, w))
+    info = engine.cache_info()
+    assert info.exec_uploads == uploads_after_first, \
+        "steady-state pim_sim decode must not re-upload crossbar state"
+    assert info.exec_hits >= 3
+    assert np.array_equal(out, first)            # bit-identical steady state

@@ -1,8 +1,10 @@
 """Serving example: batched prefill + greedy decode on a small config.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch jamba-v0.1-52b]
-(any decoder-only architecture — enc-dec/vision and sliding-window serving
-are ROADMAP follow-ons; --preset tiny keeps it CPU-sized)
+(any decoder-only architecture, sliding-window included — those page their
+KV into block rings automatically; enc-dec/vision serving is a ROADMAP
+follow-on.  --preset tiny keeps it CPU-sized; add --paged via
+launch/serve.py for the block-paged pool on full-attention archs.)
 """
 import argparse
 import sys

@@ -126,6 +126,14 @@ def cache_pspecs(caches, mesh, *, batch_over_dp: bool = True):
     continuous batching scatters arbitrary slots on admit/evict, and a
     DP-sharded slot dim would turn every single-slot update into
     cross-device traffic.
+
+    Block-paged pools (``serving.PagedCachePool``) reuse the same factory:
+    their attention leaves are ``(n_super, num_blocks, block, heads, hd)``,
+    so dim 1 is the *block* dim — it must stay replicated for the same
+    reason slots do (any slot touches any block), hence paged pools always
+    pass ``batch_over_dp=False``; heads still shard over "model".  The
+    block *table* itself is a tiny replicated int32 array and never gets a
+    spec here.
     """
     dp, tp_ax = dctx.mesh_axes(mesh)
 

@@ -7,7 +7,11 @@ admit (bucketed prompts), a persistent slot-indexed KV-cache pool, and one
 jitted decode step that never recompiles as requests churn.  Prints
 per-request TTFT/TPOT and aggregate tokens/sec; ``--sequential`` runs the
 same trace one-request-at-a-time (a max_batch=1 scheduler) for an A/B
-throughput comparison.
+throughput comparison.  ``--paged`` swaps in the block-paged KV pool
+(``--block-size`` / ``--num-blocks``): long-tail prompts reserve only
+their own block need instead of worst-case slots, and sliding-window
+architectures — which page unconditionally — serve as rings over their
+block lists.
 
 CPU-runnable with ``--smoke``/``--preset``.  On multi-device runs the
 driver enters the ``ElasticMesh`` (same policy as ``launch/train.py``);
@@ -36,9 +40,12 @@ from repro.serving import Scheduler, ServingConfig, synthetic_requests
 
 
 def serve_trace(params, cfg, requests, *, max_batch: int, prompt_bucket: int,
-                mesh=None):
+                mesh=None, paged: bool = False, block_size: int = 16,
+                num_blocks=None):
     """Run a request trace through the scheduler; returns (results, summary)."""
-    scfg = ServingConfig(max_batch=max_batch, prompt_bucket=prompt_bucket)
+    scfg = ServingConfig(max_batch=max_batch, prompt_bucket=prompt_bucket,
+                         paged=paged, block_size=block_size,
+                         num_blocks=num_blocks)
     sched = Scheduler(params, cfg, scfg, mesh=mesh)
     for req in requests:
         sched.submit_request(req)
@@ -68,6 +75,17 @@ def main():
     ap.add_argument("--pim-mode", choices=["xla", "quant", "pim_sim"],
                     default=None)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV pool (admits reserve blocks from "
+                         "a free list; long-tail prompts stop paying "
+                         "worst-case reservation).  Sliding-window archs "
+                         "page regardless of this flag")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged pool)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="physical KV blocks (default: full parity with "
+                         "the contiguous pool; smaller oversubscribes and "
+                         "defers admissions under pressure)")
     ap.add_argument("--sequential", action="store_true",
                     help="also run the trace one-request-at-a-time "
                          "(max_batch=1) for an A/B comparison")
@@ -100,7 +118,8 @@ def main():
     with mesh_ctx:
         results, summary = serve_trace(
             params, cfg, requests, max_batch=args.batch,
-            prompt_bucket=bucket, mesh=mesh)
+            prompt_bucket=bucket, mesh=mesh, paged=args.paged,
+            block_size=args.block_size, num_blocks=args.num_blocks)
         print(f"served {summary['n_finished']}/{summary['n_requests']} "
               f"requests, {summary['total_tokens']} tokens @ "
               f"{summary['tokens_per_s']:.0f} tok/s "
@@ -110,6 +129,13 @@ def main():
               f"TPOT {summary['mean_tpot_s'] * 1e3:.1f}ms | "
               f"queue wait {summary['mean_queue_wait_s'] * 1e3:.0f}ms | "
               f"active slots {summary['mean_active_slots']:.1f}")
+        if args.paged or cfg.sliding_window:
+            print(f"[pool] peak KV {summary['peak_kv_bytes'] / 1e6:.2f}MB "
+                  f"(peak {summary['peak_pool_blocks']:.0f} blocks, "
+                  f"occupancy {summary['mean_block_occupancy'] * 100:.0f}%, "
+                  f"internal frag "
+                  f"{summary['mean_internal_frag'] * 100:.0f}%, "
+                  f"{summary['deferred_admits']} deferred admits)")
         if args.pim_mode == "pim_sim":
             info = engine.cache_info()
             print(f"[pim] crossbar uploads {info.exec_uploads}, "

@@ -129,9 +129,17 @@ def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
     return out[:, :sq]
 
 
-def decode_attention(q, k_cache, v_cache, cache_len, *,
-                     window: Optional[int] = None) -> jnp.ndarray:
-    """Single-step attention: q (B, 1, H, D) over cache (B, S, Hkv, D)."""
+def decode_attention(q, k_cache, v_cache, cache_len=None, *,
+                     window: Optional[int] = None,
+                     valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Single-step attention: q (B, 1, H, D) over cache (B, S, Hkv, D).
+
+    The key mask comes from ``cache_len`` (prefix semantics: indices below
+    it are live, optionally window-clipped) or, for non-contiguous cache
+    layouts, from an explicit ``valid`` (B, S) boolean mask — the paged
+    pool's gather path computes per-logical-index validity (ring wraparound,
+    unallocated sentinel blocks) that a single prefix length can't express.
+    """
     b, _, h, d = q.shape
     _, s, hkv, _ = k_cache.shape
     n_rep = h // hkv
@@ -139,10 +147,14 @@ def decode_attention(q, k_cache, v_cache, cache_len, *,
     scores = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
                         preferred_element_type=jnp.float32)
     scores = scores / math.sqrt(d)
-    pos = jnp.arange(s)
-    mask = pos[None, :] < cache_len  # (B?, S) — cache_len scalar or (B,)
-    if window is not None:
-        mask = mask & (pos[None, :] > cache_len - 1 - window)
+    if valid is not None:
+        mask = valid
+    else:
+        pos = jnp.arange(s)
+        mask = pos[None, :] < cache_len  # (B?, S) — cache_len scalar or (B,)
+        if window is not None:
+            mask = mask & (pos[None, :] > cache_len - 1 - window)
+    mask = jnp.broadcast_to(mask, (b, s))
     scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
     out = jnp.einsum("bhgqs,bshd->bqhgd", p, v_cache,

@@ -140,6 +140,27 @@ class ModelConfig:
         so e.g. right-padded prompts are not admissible)."""
         return any(k in ("md", "me", "xm", "xs") for k in self.pattern)
 
+    def window_ring_blocks(self, block_size: int) -> Optional[int]:
+        """Blocks in a sliding-window decode ring (None when unwindowed).
+
+        The ring capacity is the window rounded up to a whole number of
+        blocks: a windowed slot never holds more than this many blocks, no
+        matter how long the prompt or the generation runs."""
+        if not self.sliding_window:
+            return None
+        return -(-self.sliding_window // block_size)
+
+    def kv_blocks_for(self, n_tokens: int, block_size: int) -> int:
+        """KV-cache blocks a request writing ``n_tokens`` positions needs.
+
+        Unwindowed requests page linearly (``ceil(n_tokens / block)``);
+        windowed ones are clamped to the ring capacity, which is the whole
+        point of sliding-window serving: generation length stops mattering
+        to the reservation."""
+        nb = -(-max(int(n_tokens), 1) // block_size)
+        ring = self.window_ring_blocks(block_size)
+        return nb if ring is None else min(nb, ring)
+
     @property
     def sub_quadratic(self) -> bool:
         """Whether long-context decode is admissible (DESIGN.md §3):

@@ -209,7 +209,7 @@ def _dequantize_kv(q, scale, dtype):
 
 
 def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
-                    causal=True):
+                    causal=True, block_tables=None):
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     quant = cfg.kv_cache_dtype == "int8"
@@ -221,7 +221,50 @@ def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     new_cache = None
-    if mode == "decode":
+    if mode == "decode" and block_tables is not None:
+        # Block-paged cache: leaves are (num_blocks, block, hkv, hd) physical
+        # stores shared by every slot; ``block_tables`` (B, blocks_per_slot)
+        # maps each slot's logical blocks to physical ones (sentinel entries
+        # point at the reserved trash block 0, which no reader unmasks).
+        # Logical index: the absolute position, or — under a sliding window —
+        # the position modulo the block-rounded ring capacity.
+        bs_blk = cache["k"].shape[1]
+        lcap = block_tables.shape[1] * bs_blk
+        r = jnp.arange(lcap)
+        if cfg.sliding_window:
+            ring = cfg.window_ring_blocks(bs_blk) * bs_blk
+            widx = pos % ring
+            _, in_ring = ring_slot_positions(pos[:, None], r[None, :],
+                                             ring, cfg.sliding_window)
+            valid = (r[None, :] < ring) & in_ring
+        else:
+            widx = pos
+            valid = r[None, :] <= pos[:, None]
+        blk = block_tables[jnp.arange(b), widx // bs_blk]
+        off = widx % bs_blk
+
+        def put(c, new):
+            return c.at[blk, off].set(new[:, 0].astype(c.dtype))
+
+        def gather(c):
+            return c[block_tables].reshape((b, lcap) + c.shape[2:])
+
+        if quant:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            kc, vc = put(cache["k"], kq), put(cache["v"], vq)
+            ksc, vsc = put(cache["k_scale"], ks), put(cache["v_scale"], vs)
+            k_full = _dequantize_kv(gather(kc), gather(ksc),
+                                    cfg.compute_dtype)
+            v_full = _dequantize_kv(gather(vc), gather(vsc),
+                                    cfg.compute_dtype)
+            new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+        else:
+            kc, vc = put(cache["k"], k), put(cache["v"], v)
+            k_full, v_full = gather(kc), gather(vc)
+            new_cache = {"k": kc, "v": vc}
+        out = attn.decode_attention(q, k_full, v_full, valid=valid)
+    elif mode == "decode":
         cap = cache["k"].shape[1]
         idx = pos % cap
         per_slot = jnp.ndim(pos) == 1  # continuous batching: (B,) positions
@@ -261,14 +304,23 @@ def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
         out = attn_fn(q, k, v, causal=causal, window=window)
         if mode == "prefill":
             if cfg.sliding_window:
-                cap = min(s, cfg.sliding_window)
-                # ring alignment: decode writes position p at index p % cap,
-                # so position (s-cap+r) must sit at index (s-cap+r) % cap.
-                shift = (s - cap) % cap if cap else 0
-                kc = jnp.roll(k[:, -cap:], shift, axis=1) if shift \
-                    else k[:, -cap:]
-                vc = jnp.roll(v[:, -cap:], shift, axis=1) if shift \
-                    else v[:, -cap:]
+                # ring capacity: the window, with decode headroom padded for
+                # prompts shorter than it (a ring of only min(s, window)
+                # entries would wrap early and forget keys still inside the
+                # window); capped at max_seq_len like the dense branch.
+                cap = min(cfg.sliding_window, max(s, cfg.max_seq_len))
+                if s < cap:
+                    pad = ((0, 0), (0, cap - s), (0, 0), (0, 0))
+                    kc, vc = jnp.pad(k, pad), jnp.pad(v, pad)
+                else:
+                    # ring alignment: decode writes position p at index
+                    # p % cap, so position (s-cap+r) must sit at index
+                    # (s-cap+r) % cap.
+                    shift = (s - cap) % cap if cap else 0
+                    kc = jnp.roll(k[:, -cap:], shift, axis=1) if shift \
+                        else k[:, -cap:]
+                    vc = jnp.roll(v[:, -cap:], shift, axis=1) if shift \
+                        else v[:, -cap:]
             else:
                 # full cache with decode headroom up to max_seq_len
                 cap = max(s, cfg.max_seq_len)
@@ -351,12 +403,13 @@ def _xlstm(x, p, cfg: ModelConfig, mode, cache, kind):
 
 
 def apply_block(kind: str, x, p, cfg: ModelConfig, *, positions, mode,
-                cache=None, pos=None, memory=None):
+                cache=None, pos=None, memory=None, block_tables=None):
     """Returns (x, cache_out or None)."""
     out_cache = {}
     if kind in ("ad", "ae", "ar", "adx", "enc"):
         x, c = _self_attention(x, p, cfg, positions, mode, cache, pos,
-                               causal=(kind != "enc"))
+                               causal=(kind != "enc"),
+                               block_tables=block_tables)
         if c:
             out_cache.update(c)
     if kind == "adx":
@@ -389,8 +442,10 @@ def apply_block(kind: str, x, p, cfg: ModelConfig, *, positions, mode,
 # ==========================================================================
 
 def _decoder_stack(params, x, cfg: ModelConfig, *, positions, mode,
-                   caches=None, pos=None, memory=None):
-    """Scan over super-blocks. caches: dict pos->stacked cache (or None)."""
+                   caches=None, pos=None, memory=None, block_tables=None):
+    """Scan over super-blocks. caches: dict pos->stacked cache (or None).
+    ``block_tables`` is shared by every layer (one slot->physical-block map
+    for the whole paged pool), so it rides the closure, not the scan."""
 
     def body(xc, layer_inputs):
         x = xc
@@ -399,7 +454,8 @@ def _decoder_stack(params, x, cfg: ModelConfig, *, positions, mode,
             pslice = layer_inputs[0][str(i)]
             cslice = layer_inputs[1].get(str(i)) if layer_inputs[1] else None
             x, c = apply_block(kind, x, pslice, cfg, positions=positions,
-                               mode=mode, cache=cslice, pos=pos, memory=memory)
+                               mode=mode, cache=cslice, pos=pos, memory=memory,
+                               block_tables=block_tables)
             if c is not None:
                 new_caches[str(i)] = c
         return x, (new_caches or None)
@@ -535,10 +591,10 @@ def prefill(params, batch, cfg: ModelConfig, last_index=None):
     there instead of at ``S - 1``.  Causal masking makes every position
     <= ``last_index`` independent of the padding, so bucketed prefill is
     exact for *full-attention* stacks only: recurrent blocks (Mamba/xLSTM)
-    fold the padding into their state, and sliding-window caches both size
-    their ring by the padded length and keep pad KV inside the window —
-    serve those unbucketed (and windowed ones not at all, for now; the
-    serving scheduler enforces both).
+    fold the padding into their state (serve those unbucketed), and a
+    sliding-window cache keeps pad KV inside its ring once the padded
+    length exceeds the window — the serving scheduler buckets windowed
+    prompts only while ``padded <= window`` and enforces the rest.
     """
     with _pim_ctx(cfg):
         tokens = batch["tokens"]
@@ -571,7 +627,8 @@ def decode_step(params, token, pos, caches, cfg: ModelConfig):
         return next_tok, logits, new_caches
 
 
-def decode_step_slots(params, tokens, pos, active, caches, cfg: ModelConfig):
+def decode_step_slots(params, tokens, pos, active, caches, cfg: ModelConfig,
+                      block_tables=None):
     """One decode step over a slot batch (continuous batching).
 
     ``tokens``: (B, 1) int32 current token per slot; ``pos``: (B,) int32
@@ -583,12 +640,19 @@ def decode_step_slots(params, tokens, pos, active, caches, cfg: ModelConfig):
     writes its (garbage) KV at ``pos[b] % cap`` of its *own* cache rows,
     which other slots never read and which prefill-on-admit fully
     overwrites; its emitted token is pinned to 0 by the active mask.
+
+    ``block_tables`` (B, blocks_per_slot) int32 switches the attention
+    leaves to the block-paged layout (``paged_cache_specs``): reads gather
+    the slot's blocks, writes land at the slot's current block/offset, and
+    an inactive slot's all-sentinel row routes its garbage write to the
+    trash block.  Its shape is fixed, so block churn never recompiles.
     """
     with _pim_ctx(cfg):
         x = _embed_in(params, tokens, cfg)
         x, new_caches = _decoder_stack(params, x, cfg,
                                        positions=pos[:, None],
-                                       mode="decode", caches=caches, pos=pos)
+                                       mode="decode", caches=caches, pos=pos,
+                                       block_tables=block_tables)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = unembed(x[:, -1],
                          _unembed_table(params, cfg)).astype(jnp.float32)
@@ -600,6 +664,50 @@ def decode_step_slots(params, tokens, pos, active, caches, cfg: ModelConfig):
 # ==========================================================================
 # cache specs (for the dry-run)
 # ==========================================================================
+
+#: Attention-KV leaf names eligible for block paging: these carry a token
+#: (sequence) dim and grow with context.  Everything else in the decode
+#: cache tree — recurrent state (ssm/conv/c/n/m) and cross-attention
+#: memory (xk/xv) — is fixed-size per slot and stays slot-indexed.
+PAGED_KV_KEYS = ("k", "v", "k_scale", "v_scale")
+
+
+def ring_slot_positions(last_pos, r, ring: int, window: int):
+    """Sliding-window ring congruence, shared by writeback and readback.
+
+    For ring index ``r`` (broadcastable against ``last_pos``), returns
+    ``(p_r, valid)``: the newest absolute position ``<= last_pos`` with
+    ``p_r % ring == r``, and whether that position exists and is still
+    inside the attention window.  The paged decode path (reading a slot's
+    block ring at position ``last_pos``) and the pool's admit conversion
+    (laying out a ``plen``-token prefill, ``last_pos = plen - 1``) must
+    agree on this bit-for-bit — keep both on this helper.
+    """
+    p_r = last_pos - ((last_pos - r) % ring)
+    return p_r, (p_r >= 0) & (p_r > last_pos - window)
+
+
+def paged_cache_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                      num_blocks: int, block_size: int) -> Dict:
+    """``cache_specs`` with the attention-KV leaves re-laid as block pools.
+
+    Each ``PAGED_KV_KEYS`` leaf becomes a ``(n_super, num_blocks,
+    block_size, ...)`` physical store shared by every slot (block 0 is the
+    pool's reserved sentinel/trash block); the per-slot token capacity
+    moves into the block table, not the array shapes.  Non-attention
+    leaves keep their ``(n_super, batch, ...)`` slot layout.
+    """
+    out = cache_specs(cfg, batch, seq_len)
+    for c in out.values():
+        for key in PAGED_KV_KEYS:
+            if key in c:
+                s = c[key]
+                # (ns, batch, cap, ...) -> (ns, num_blocks, block, ...)
+                c[key] = jax.ShapeDtypeStruct(
+                    (s.shape[0], num_blocks, block_size) + s.shape[3:],
+                    s.dtype)
+    return out
+
 
 def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
     """ShapeDtypeStructs of the decode caches for a given shape cell."""

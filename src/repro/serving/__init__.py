@@ -6,7 +6,7 @@ continuous-batching scheduler whose jitted decode step never recompiles as
 requests churn (``scheduler``), and per-request/aggregate serving metrics
 (``metrics``).  ``launch/serve.py`` is a thin CLI over this package.
 """
-from repro.serving.cache import CachePool
+from repro.serving.cache import CachePool, PagedCachePool
 from repro.serving.metrics import RequestMetrics, ServingMetrics
 from repro.serving.queue import (AdmissionQueue, Request, make_request,
                                  synthetic_requests)
@@ -15,6 +15,7 @@ from repro.serving.scheduler import Scheduler, ServingConfig
 __all__ = [
     "AdmissionQueue",
     "CachePool",
+    "PagedCachePool",
     "Request",
     "RequestMetrics",
     "Scheduler",

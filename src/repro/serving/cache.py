@@ -1,29 +1,68 @@
-"""Slot-indexed decode-cache pool for continuous batching.
+"""Decode-cache pools for continuous batching: slot-contiguous and paged.
 
-The pool is the full decode-cache tree of ``models.model.cache_specs`` at
-``(max_batch, max_len)`` — allocated **once**, never reshaped.  Requests
-come and go by *slot index*: admit writes a prefill cache into slot ``s``
-with ``lax.dynamic_update_slice_in_dim`` on the batch dim, evict zeroes it
-the same way.  Both are jitted once with the slot as a traced scalar, so a
-churning request mix never recompiles anything.
+Two pool layouts share one scheduler-facing API (``can_admit`` /
+``admit`` / ``evict`` / ``read_slot`` / ``stats``):
 
-Under a mesh the pool is placed by ``dist.cache_pspecs(...,
-batch_over_dp=False)``: heads shard over "model", but the slot dim stays
-replicated — continuous batching touches arbitrary slots every step, and a
-DP-sharded slot dim would make each admit a cross-device scatter.
+:class:`CachePool` is the naive layout — the full decode-cache tree of
+``models.model.cache_specs`` at ``(max_batch, max_len)``, allocated once;
+every slot reserves worst-case ``max_len`` KV whether its request needs 10
+tokens or 10k.  Admits/evicts are single jitted ``dynamic_update_slice``
+writes on the batch dim.
+
+:class:`PagedCachePool` is the PartitionPIM move applied to HBM: just as
+the paper divides one fixed crossbar into dynamic partitions so
+independent work shares the substrate without worst-case reservation, the
+paged pool divides each attention-KV leaf into a ``(num_blocks,
+block_size, ...)`` physical store shared by all slots.  A per-slot block
+table (``(max_batch, blocks_per_slot)`` int32, sentinel ``0`` pointing at
+a reserved trash block) maps logical token blocks to physical ones; a
+host-side free-list allocator reserves exactly
+``ceil((prompt + budget) / block_size)`` blocks per request at admit time
+(admission defers when the free list is short — never a mid-decode OOM),
+and evict returns the blocks.  The jitted decode step reads through a
+gather on the block table, whose shape is fixed, so block churn never
+recompiles anything.
+
+Paging is also what unblocks **sliding-window serving**: a windowed slot
+is a *ring* over its block list with capacity ``ceil(window / block) *
+block`` — prefill installs the last ``min(prompt, window)`` positions,
+decode wraps, and the reservation stops depending on prompt + generation
+length entirely.  Recurrent state (ssm/conv, xLSTM c/n/m) and
+cross-attention memory are fixed-size per slot and stay slot-indexed in
+both pools (``models.model.PAGED_KV_KEYS`` names what pages).
+
+Under a mesh both pools are placed by ``dist.cache_pspecs(...,
+batch_over_dp=False)``: heads shard over "model", but the slot dim — and
+for paged leaves the *block* dim in its place — stays replicated:
+continuous batching touches arbitrary slots/blocks every step, and a
+sharded dim 1 would make each admit a cross-device scatter.  Block tables
+are tiny int32 and replicated.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.dist import partitioning as dpart
 from repro.models import model_lib as M
 from repro.models.config import ModelConfig
 
-__all__ = ["CachePool"]
+__all__ = ["CachePool", "PagedCachePool"]
+
+
+def _kv_leaf_bytes(tree) -> int:
+    """Bytes of the attention-KV (pageable) leaves of a cache tree."""
+    total = 0
+    for c in tree.values():
+        for key in M.PAGED_KV_KEYS:
+            if key in c:
+                leaf = c[key]
+                total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype
+                                                              ).itemsize
+    return total
 
 
 class CachePool:
@@ -35,11 +74,16 @@ class CachePool:
     ``max_len`` capacity (i.e. with ``cfg.max_seq_len == max_len``).
     """
 
+    paged = False
+    block_tables = None            # uniform scheduler interface
+
     def __init__(self, cfg: ModelConfig, max_batch: int,
                  max_len: Optional[int] = None, *, mesh=None):
         self.max_batch = max_batch
         self.max_len = max_len or cfg.max_seq_len
+        self.max_tokens = self.max_len          # per-slot token capacity
         specs = M.cache_specs(cfg, max_batch, self.max_len)
+        self.kv_reserved_bytes = _kv_leaf_bytes(specs)
         self.caches: Dict[str, Any] = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), specs,
             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
@@ -82,3 +126,256 @@ class CachePool:
     def read_slot(self, slot: int):
         """The (batch-1) cache view of ``slot`` — tests/inspection."""
         return self._read(self.caches, jnp.int32(slot))
+
+    # ---- uniform pool interface -------------------------------------
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Contiguous slots always fit (capacity was reserved up front)."""
+        return True
+
+    def admit(self, slot: int, request_cache, plen: int,
+              n_tokens: int) -> None:
+        self.assign(slot, request_cache)
+
+    def stats(self) -> Dict[str, float]:
+        """Occupancy snapshot.  The contiguous pool's KV bytes are its
+        static worst-case reservation — that constant is exactly what the
+        paged pool's ``bytes_in_use`` undercuts on long-tail traces."""
+        return {
+            "kv_bytes_in_use": float(self.kv_reserved_bytes),
+            "kv_bytes_reserved": float(self.kv_reserved_bytes),
+            "blocks_in_use": float(self.max_batch),
+            "blocks_total": float(self.max_batch),
+            "tokens_reserved": float(self.max_batch * self.max_len),
+        }
+
+
+class PagedCachePool:
+    """Block-paged decode caches: attention KV in shared physical blocks.
+
+    ``block_size`` tokens per block; ``num_blocks`` physical blocks per KV
+    leaf (default: full parity with the contiguous pool — every slot can
+    hold ``blocks_per_slot`` blocks — plus the reserved trash block; pass
+    something smaller to actually oversubscribe).  Block 0 is never
+    allocated: it is the sentinel target of unassigned block-table entries,
+    absorbing the garbage writes of inactive decode slots.
+
+    ``admit`` expects a (batch-1) prefill cache and the request's true
+    prompt length: the paged leaves are *converted* — gathered from the
+    prefill layout (dense, or the windowed ring) into position-ordered
+    logical blocks, invalid positions zeroed — and scattered to the slot's
+    physical blocks in one jitted op per prefill bucket shape.
+    """
+
+    paged = True
+
+    def __init__(self, cfg: ModelConfig, max_batch: int,
+                 max_len: Optional[int] = None, *, block_size: int = 16,
+                 num_blocks: Optional[int] = None, mesh=None):
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len or cfg.max_seq_len
+        self.block_size = block_size
+        ring = cfg.window_ring_blocks(block_size)
+        self.blocks_per_slot = (ring if ring is not None
+                                else -(-self.max_len // block_size))
+        self.lcap = self.blocks_per_slot * block_size   # logical tokens/slot
+        # windowed slots can generate forever (the ring wraps); unwindowed
+        # ones are bounded by the configured horizon, NOT the block-rounded
+        # lcap — the layout must never admit a request the contiguous pool
+        # would reject (positions past max_len are outside the declared
+        # context even when rounding leaves physical room)
+        self.max_tokens = (None if cfg.sliding_window else self.max_len)
+        self.num_blocks = (num_blocks if num_blocks is not None
+                           else max_batch * self.blocks_per_slot + 1)
+        if self.num_blocks < 2:
+            raise ValueError("num_blocks must be >= 2 (block 0 is the "
+                             "reserved sentinel/trash block)")
+        self._mesh = mesh
+
+        specs = M.paged_cache_specs(cfg, max_batch, self.max_len,
+                                    self.num_blocks, block_size)
+        per_pool = _kv_leaf_bytes(specs)
+        self.block_bytes = per_pool // self.num_blocks  # all leaves/layers
+        self._has_paged_leaves = per_pool > 0
+        self.caches: Dict[str, Any] = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        if mesh is not None:
+            self.caches = jax.device_put(self.caches, dpart.tree_shardings(
+                dpart.cache_pspecs(self.caches, mesh, batch_over_dp=False),
+                mesh))
+
+        # host allocator state: free-list (LIFO keeps reuse warm), per-slot
+        # block lists, and the sentinel-padded table mirrored to device
+        self._free: List[int] = list(range(self.num_blocks - 1, 0, -1))
+        self._slot_blocks: List[List[int]] = [[] for _ in range(max_batch)]
+        self._table = np.zeros((max_batch, self.blocks_per_slot), np.int32)
+        self._table_dev = None
+        self.peak_blocks_in_use = 0
+
+        window = cfg.sliding_window
+        lcap, bs = self.lcap, block_size
+
+        def assign(pool, request_cache, table_row, slot, plen):
+            def paged_leaf(c, rleaf):
+                # rleaf (ns, 1, cap_p, ...): dense positions 0..cap_p-1, or
+                # — windowed — position p at ring index p % cap_p.
+                cap_p = rleaf.shape[2]
+                r = jnp.arange(lcap)
+                if window:
+                    # same congruence the paged decode read applies (the
+                    # windowed pool's lcap IS the ring capacity)
+                    p_r, valid = M.ring_slot_positions(plen - 1, r, lcap,
+                                                       window)
+                else:
+                    p_r = r
+                    valid = r < plen
+                src = p_r % cap_p
+                logical = jnp.take(rleaf[:, 0], src, axis=1)  # (ns, lcap,...)
+                vshape = (1, lcap) + (1,) * (logical.ndim - 2)
+                logical = jnp.where(valid.reshape(vshape), logical, 0)
+                blocks = logical.reshape(
+                    (logical.shape[0], self.blocks_per_slot, bs)
+                    + logical.shape[2:]).astype(c.dtype)
+                # sentinel-padded rows scatter their tail into trash block 0
+                return c.at[:, table_row].set(blocks)
+
+            out = {}
+            for li, c in pool.items():
+                oc = {}
+                for key, leaf in c.items():
+                    if key in M.PAGED_KV_KEYS:
+                        oc[key] = paged_leaf(leaf, request_cache[li][key])
+                    else:
+                        oc[key] = jax.lax.dynamic_update_slice_in_dim(
+                            leaf, request_cache[li][key].astype(leaf.dtype),
+                            slot, axis=1)
+                out[li] = oc
+            return out
+
+        def evict(pool, table_row, slot):
+            out = {}
+            for li, c in pool.items():
+                oc = {}
+                for key, leaf in c.items():
+                    if key in M.PAGED_KV_KEYS:
+                        z = jnp.zeros((leaf.shape[0], self.blocks_per_slot,
+                                       bs) + leaf.shape[3:], leaf.dtype)
+                        oc[key] = leaf.at[:, table_row].set(z)
+                    else:
+                        oc[key] = jax.lax.dynamic_update_slice_in_dim(
+                            leaf, jnp.zeros(
+                                leaf.shape[:1] + (1,) + leaf.shape[2:],
+                                leaf.dtype), slot, axis=1)
+                out[li] = oc
+            return out
+
+        def read(pool, table_row, slot):
+            out = {}
+            for li, c in pool.items():
+                oc = {}
+                for key, leaf in c.items():
+                    if key in M.PAGED_KV_KEYS:
+                        g = leaf[:, table_row]          # (ns, bps, bs, ...)
+                        oc[key] = g.reshape((g.shape[0], 1, lcap)
+                                            + g.shape[3:])
+                    else:
+                        oc[key] = jax.lax.dynamic_slice_in_dim(
+                            leaf, slot, 1, axis=1)
+                out[li] = oc
+            return out
+
+        self._assign = jax.jit(assign)
+        self._evict = jax.jit(evict)
+        self._read = jax.jit(read)
+
+    # ---- allocator ---------------------------------------------------
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - 1 - len(self._free)
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        if not self._has_paged_leaves:   # pure-recurrent stack: nothing pages
+            return 0
+        return min(self.cfg.kv_blocks_for(n_tokens, self.block_size),
+                   self.blocks_per_slot)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Whether the free list covers a request writing ``n_tokens``."""
+        return self.blocks_needed(n_tokens) <= len(self._free)
+
+    @property
+    def block_tables(self) -> jnp.ndarray:
+        """Device copy of the (max_batch, blocks_per_slot) table,
+        replicated under the pool's mesh."""
+        if self._table_dev is None:
+            t = jnp.asarray(self._table)
+            if self._mesh is not None:
+                t = jax.device_put(t, jax.sharding.NamedSharding(
+                    self._mesh, jax.sharding.PartitionSpec()))
+            self._table_dev = t
+        return self._table_dev
+
+    # ---- pool ops ----------------------------------------------------
+
+    def admit(self, slot: int, request_cache, plen: int,
+              n_tokens: int) -> None:
+        """Reserve blocks for ``n_tokens`` total positions and install the
+        (batch-1) prefill cache of a ``plen``-token prompt into ``slot``.
+
+        Callers must check :meth:`can_admit` first; an insufficient free
+        list here is a scheduler bug, not back-pressure.
+        """
+        if self._slot_blocks[slot]:
+            raise RuntimeError(f"slot {slot} already holds blocks")
+        need = self.blocks_needed(n_tokens)
+        if need > len(self._free):
+            raise RuntimeError(
+                f"free list underflow: slot {slot} needs {need} blocks, "
+                f"{len(self._free)} free — check can_admit() before admit")
+        blocks = [self._free.pop() for _ in range(need)]
+        self._slot_blocks[slot] = blocks
+        self._table[slot] = 0
+        self._table[slot, :need] = blocks
+        self._table_dev = None
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.blocks_in_use)
+        self.caches = self._assign(self.caches, request_cache,
+                                   jnp.asarray(self._table[slot]),
+                                   jnp.int32(slot), jnp.int32(plen))
+
+    def evict(self, slot: int) -> None:
+        """Zero the slot's physical blocks and return them to the free
+        list (stale KV never leaks into the next tenant)."""
+        if self._slot_blocks[slot]:
+            self.caches = self._evict(self.caches,
+                                      jnp.asarray(self._table[slot]),
+                                      jnp.int32(slot))
+        self._free.extend(reversed(self._slot_blocks[slot]))
+        self._slot_blocks[slot] = []
+        self._table[slot] = 0
+        self._table_dev = None
+
+    def read_slot(self, slot: int):
+        """The (batch-1) *logical* cache view of ``slot``: paged leaves are
+        gathered back to position-ordered ``(ns, 1, lcap, ...)`` arrays
+        (sentinel blocks read the trash block — callers mask by length),
+        slot-state leaves sliced as-is.  Tests/inspection."""
+        return self._read(self.caches, jnp.asarray(self._table[slot]),
+                          jnp.int32(slot))
+
+    def stats(self) -> Dict[str, float]:
+        """Occupancy snapshot for ``ServingMetrics.sample_pool``."""
+        used = self.blocks_in_use
+        return {
+            "kv_bytes_in_use": float(used * self.block_bytes),
+            "kv_bytes_reserved": float((self.num_blocks - 1)
+                                       * self.block_bytes),
+            "blocks_in_use": float(used),
+            "blocks_total": float(self.num_blocks - 1),
+            "tokens_reserved": float(used * self.block_size),
+        }

@@ -55,6 +55,8 @@ class ServingMetrics:
         self.requests: Dict[int, RequestMetrics] = {}
         self.queue_depth_samples: List[int] = []
         self.active_samples: List[int] = []
+        self.pool_samples: List[Dict[str, float]] = []
+        self.deferred_admits = 0
 
     def on_submit(self, rid: int, now: float) -> None:
         self.requests[rid] = RequestMetrics(rid=rid, arrival_time=now)
@@ -76,6 +78,20 @@ class ServingMetrics:
         self.queue_depth_samples.append(depth)
         self.active_samples.append(active)
 
+    def sample_pool(self, stats: Dict[str, float],
+                    tokens_live: float = math.nan) -> None:
+        """Record one cache-pool occupancy snapshot (``CachePool.stats()``
+        shape: kv_bytes_in_use/reserved, blocks_in_use/total,
+        tokens_reserved).  ``tokens_live`` — positions actually written —
+        lets the summary report internal fragmentation (reserved-but-
+        unwritten token slots inside allocated blocks)."""
+        self.pool_samples.append(dict(stats, tokens_live=tokens_live))
+
+    def on_deferred_admit(self) -> None:
+        """An arrived request stayed queued because the pool's free list
+        could not cover its reservation (paged-pool back-pressure)."""
+        self.deferred_admits += 1
+
     # ------------------------------------------------------------------
 
     @staticmethod
@@ -91,6 +107,16 @@ class ServingMetrics:
                  default=math.nan)
         t1 = max((r.finish_time for r in done), default=math.nan)
         busy = t1 - t0 if not (math.isnan(t0) or math.isnan(t1)) else math.nan
+        peak_bytes = max((p["kv_bytes_in_use"] for p in self.pool_samples),
+                         default=math.nan)
+        peak_blocks = max((p["blocks_in_use"] for p in self.pool_samples),
+                          default=math.nan)
+        occ = self._mean([p["blocks_in_use"] / p["blocks_total"]
+                          for p in self.pool_samples if p["blocks_total"]])
+        frag = self._mean(
+            [1.0 - p["tokens_live"] / p["tokens_reserved"]
+             for p in self.pool_samples
+             if p["tokens_reserved"] and not math.isnan(p["tokens_live"])])
         return {
             "n_requests": len(rs),
             "n_finished": len(done),
@@ -103,4 +129,12 @@ class ServingMetrics:
             "max_queue_depth": max(self.queue_depth_samples, default=0),
             "mean_active_slots": self._mean(
                 [float(a) for a in self.active_samples]),
+            # cache-pool occupancy (sampled once per scheduler step):
+            # peak bytes is the headline paged-vs-contiguous comparison —
+            # the contiguous pool reports its static reservation here.
+            "peak_kv_bytes": peak_bytes,
+            "peak_pool_blocks": peak_blocks,
+            "mean_block_occupancy": occ,
+            "mean_internal_frag": frag,
+            "deferred_admits": self.deferred_admits,
         }

@@ -20,7 +20,14 @@ to 1).  Each scheduler step:
 Bucketed prefill retraces once per distinct bucket length (a handful of
 compiles, amortized over the run) and is exact for attention stacks; for
 recurrent blocks (Mamba/xLSTM) set ``prompt_bucket=1`` so prompts run
-unpadded.  Under ``pim_mode="pim_sim"`` the decode step's crossbar GEMMs
+unpadded.  With ``ServingConfig(paged=True)`` the KV pool is block-paged
+(see :mod:`repro.serving.cache`): admits reserve blocks from a free list
+and *defer* when it runs short, evictions return blocks, and the decode
+step reads through a fixed-shape block table — still exactly one trace.
+Sliding-window configs serve as rings over their block lists and enable
+paging automatically (prompts bucket only while the padded length stays
+inside the window).  Under ``pim_mode="pim_sim"`` the decode step's
+crossbar GEMMs
 run through the engine's persistent :class:`ExecutionSession` pool:
 crossbar state is uploaded once per artifact and only operand columns
 stream per token.
@@ -37,7 +44,7 @@ import numpy as np
 
 from repro.models import model_lib as M
 from repro.models.config import ModelConfig
-from repro.serving.cache import CachePool
+from repro.serving.cache import CachePool, PagedCachePool
 from repro.serving.metrics import ServingMetrics
 from repro.serving.queue import AdmissionQueue, Request, make_request
 
@@ -48,12 +55,24 @@ __all__ = ["ServingConfig", "Scheduler"]
 class ServingConfig:
     """Knobs of the continuous-batching runtime.  Per-slot cache capacity
     is ``cfg.max_seq_len`` (prefill emits caches at exactly that capacity,
-    so the pool cannot be sized independently)."""
+    so the pool cannot be sized independently).
+
+    ``paged=True`` swaps the slot-contiguous pool for the block-paged
+    :class:`PagedCachePool` (``block_size`` tokens per block;
+    ``num_blocks`` physical blocks, default full parity + trash block):
+    admits reserve exactly the request's block need from a free list and
+    defer when it runs short.  Sliding-window configs require paging (a
+    windowed slot is a ring over its block list) and enable it
+    automatically.
+    """
 
     max_batch: int = 4          # decode slots
     prompt_bucket: int = 16     # prompts pad up to a multiple of this
     pad_id: int = 0
     eos_id: Optional[int] = None   # stop early on this token (None: never)
+    paged: bool = False         # block-paged KV pool
+    block_size: int = 16        # tokens per KV block (paged pool)
+    num_blocks: Optional[int] = None   # physical blocks (None: full parity)
 
 
 class Scheduler:
@@ -63,16 +82,6 @@ class Scheduler:
                  mesh=None, clock=time.monotonic):
         if scfg.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
-        # Capability boundaries (explicit errors beat silent garbage):
-        # sliding-window caches are ring buffers whose prefill capacity
-        # min(prompt, window) mismatches the pool's min(max_len, window) for
-        # short prompts, and bucket padding lands *inside* the attention
-        # window — serving them needs the ROADMAP's windowed/paged pool.
-        if cfg.sliding_window:
-            raise NotImplementedError(
-                f"{cfg.name}: sliding-window attention is not servable by "
-                "the slot pool yet (prefill ring capacity depends on prompt "
-                "length); see ROADMAP 'paged attention for the cache pool'")
         # enc-dec / vision prefill needs frames/patches carried per request
         # and their cross-attention caches pooled; not wired up yet.
         if cfg.is_encoder_decoder or cfg.vision_dim:
@@ -91,8 +100,17 @@ class Scheduler:
         self.clock = clock
         self.queue = AdmissionQueue()
         self.metrics = ServingMetrics()
-        self.pool = CachePool(cfg, scfg.max_batch, cfg.max_seq_len,
-                              mesh=mesh)
+        # sliding-window slots are rings over their block list — only the
+        # paged pool can size prefill capacity min(prompt, window), so
+        # windowed configs page unconditionally
+        if scfg.paged or cfg.sliding_window:
+            self.pool = PagedCachePool(
+                cfg, scfg.max_batch, cfg.max_seq_len,
+                block_size=scfg.block_size, num_blocks=scfg.num_blocks,
+                mesh=mesh)
+        else:
+            self.pool = CachePool(cfg, scfg.max_batch, cfg.max_seq_len,
+                                  mesh=mesh)
 
         B = scfg.max_batch
         self._slot_rid = np.full(B, -1, np.int64)
@@ -100,11 +118,14 @@ class Scheduler:
         self._tokens = np.zeros((B, 1), np.int32)
         self._remaining = np.zeros(B, np.int64)
         self._outputs: Dict[int, List[int]] = {}
+        self._deferred_rid = -1     # dedupe: one deferral count per request
         self.decode_traces = 0      # python-body executions == jit retraces
 
-        def _step(p, tokens, pos, active, caches):
+        def _step(p, tokens, pos, active, caches, tables):
+            # tables is None (an empty pytree to jit) for the contiguous pool
             self.decode_traces += 1
-            return M.decode_step_slots(p, tokens, pos, active, caches, cfg)
+            return M.decode_step_slots(p, tokens, pos, active, caches, cfg,
+                                       block_tables=tables)
 
         self._decode = jax.jit(_step)
         self._prefill = jax.jit(
@@ -131,11 +152,19 @@ class Scheduler:
 
     def submit_request(self, req: Request) -> int:
         plen = req.prompt.shape[0]
-        if plen + req.max_new_tokens > self.pool.max_len:
+        cap = self.pool.max_tokens      # None: windowed ring, unbounded
+        if cap is not None and plen + req.max_new_tokens > cap:
             raise ValueError(
                 f"request {req.rid}: prompt {plen} + budget "
-                f"{req.max_new_tokens} exceeds cache capacity "
-                f"{self.pool.max_len}")
+                f"{req.max_new_tokens} exceeds cache capacity {cap}")
+        if self.pool.paged:
+            # a need beyond the whole pool would defer forever, not
+            # eventually: back-pressure only works for satisfiable requests
+            need = self.pool.blocks_needed(plen + req.max_new_tokens)
+            if need > self.pool.num_blocks - 1:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} KV blocks but the "
+                    f"pool holds {self.pool.num_blocks - 1}")
         self.queue.submit(req)
         self.metrics.on_submit(req.rid, req.arrival_time)
         return req.rid
@@ -144,7 +173,13 @@ class Scheduler:
 
     def _bucket(self, plen: int) -> int:
         bq = max(1, self.scfg.prompt_bucket)
-        return min(((plen + bq - 1) // bq) * bq, self.pool.max_len)
+        b = ((plen + bq - 1) // bq) * bq
+        w = self.cfg.sliding_window
+        if w:
+            # bucket padding past the window would evict real KV from the
+            # prefill ring; prompts that can't bucket inside it run unpadded
+            return b if b <= w else plen
+        return min(b, self.pool.max_len)
 
     def _finish(self, slot: int, now: float) -> None:
         self.metrics.on_finish(int(self._slot_rid[slot]), now)
@@ -152,12 +187,25 @@ class Scheduler:
         self.pool.evict(slot)
 
     def _admit(self) -> List[Tuple[int, int]]:
-        """Backfill free slots from the queue; returns (rid, token) firsts."""
+        """Backfill free slots from the queue; returns (rid, token) firsts.
+
+        FIFO with back-pressure: when the paged pool's free list cannot
+        cover the head request's block reservation, admission *defers*
+        (the head stays queued — no skip-ahead, no crash) until evictions
+        return enough blocks.
+        """
         emitted: List[Tuple[int, int]] = []
         for slot in np.flatnonzero(~self.active_slots):
-            req = self.queue.pop(self.clock())
-            if req is None:
+            head = self.queue.peek()
+            if head is None or head.arrival_time > self.clock():
                 break
+            if not self.pool.can_admit(head.prompt.shape[0]
+                                       + head.max_new_tokens):
+                if head.rid != self._deferred_rid:   # count requests, not
+                    self._deferred_rid = head.rid    # ... steps spent waiting
+                    self.metrics.on_deferred_admit()
+                break
+            req = self.queue.pop(self.clock())
             plen = req.prompt.shape[0]
             bucket = self._bucket(plen)
             toks = np.full((1, bucket), self.scfg.pad_id, np.int32)
@@ -178,7 +226,8 @@ class Scheduler:
                 # would only leave stale KV in a still-free slot)
                 self.metrics.on_finish(req.rid, now)
                 continue
-            self.pool.assign(int(slot), cache)
+            self.pool.admit(int(slot), cache, plen,
+                            plen + req.max_new_tokens)
             self._slot_rid[slot] = req.rid
             self._tokens[slot, 0] = first
             self._pos[slot] = plen
@@ -196,7 +245,7 @@ class Scheduler:
             next_tok, _, new_caches = self._decode(
                 self.params, jnp.asarray(self._tokens),
                 jnp.asarray(self._pos), jnp.asarray(active),
-                self.pool.caches)
+                self.pool.caches, self.pool.block_tables)
             self.pool.caches = new_caches
             toks = np.asarray(next_tok)
             now = self.clock()
@@ -213,7 +262,15 @@ class Scheduler:
                         or tok == self.scfg.eos_id):
                     self._finish(int(slot), now)
         self.metrics.sample_queue(len(self.queue), self.n_active)
+        self.metrics.sample_pool(self.pool.stats(), self._tokens_live())
         return emitted
+
+    def _tokens_live(self) -> float:
+        """Positions actually written across active slots (for the
+        internal-fragmentation metric; ``_pos`` is the next write index,
+        clipped to the per-slot logical capacity for windowed rings)."""
+        cap = getattr(self.pool, "lcap", self.pool.max_len)
+        return float(np.minimum(self._pos[self.active_slots], cap).sum())
 
     def run(self) -> Dict[int, np.ndarray]:
         """Step until the queue drains and every slot finishes.

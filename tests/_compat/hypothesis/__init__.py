@@ -10,7 +10,10 @@ regression tests in a dependency-free environment.
 Supported surface: ``given`` (keyword strategies), ``settings(max_examples,
 deadline)``, ``assume``, and the strategies in ``hypothesis.strategies``
 (``integers``, ``booleans``, ``floats``, ``sampled_from``, ``just``,
-``tuples``, ``lists``, ``one_of``, plus ``.map``/``.filter``).
+``tuples``, ``lists``, ``one_of``, ``@composite``, plus
+``.map``/``.filter``).  Grow this surface in lockstep with the property
+tests: anything ``tests/test_codec.py`` draws must collect and pass both
+with real hypothesis and with this shim.
 """
 from __future__ import annotations
 

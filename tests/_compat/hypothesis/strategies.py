@@ -5,7 +5,8 @@ import math
 from typing import Any, Callable, Sequence
 
 __all__ = ["SearchStrategy", "Unsatisfiable", "integers", "booleans",
-           "floats", "sampled_from", "just", "tuples", "lists", "one_of"]
+           "floats", "sampled_from", "just", "tuples", "lists", "one_of",
+           "composite"]
 
 _MAX_FILTER_TRIES = 200
 
@@ -101,3 +102,23 @@ def one_of(*strategies: SearchStrategy) -> SearchStrategy:
         raise ValueError("one_of requires at least one strategy")
     return SearchStrategy(
         lambda rnd: strategies[rnd.randrange(len(strategies))].do_draw(rnd))
+
+
+def composite(fn) -> Callable[..., SearchStrategy]:
+    """``@composite`` decorator: ``fn(draw, *args)`` builds one example by
+    drawing from other strategies — the way hypothesis expresses dependent
+    draws (e.g. ``hi`` at least ``lo``).  Calling the decorated function
+    returns the strategy."""
+
+    def builder(*args, **kwargs) -> SearchStrategy:
+        def draw_impl(rnd):
+            def draw(strategy):
+                if not isinstance(strategy, SearchStrategy):
+                    raise TypeError("draw() takes a SearchStrategy")
+                return strategy.do_draw(rnd)
+
+            return fn(draw, *args, **kwargs)
+
+        return SearchStrategy(draw_impl)
+
+    return builder

@@ -173,14 +173,17 @@ def test_scheduler_rejects_oversized_request(cfg, params):
 
 
 def test_scheduler_rejects_unservable_configs(cfg, params):
-    """Explicit capability boundaries: sliding-window rings and multimodal
-    prefill inputs are ROADMAP follow-ons, not silent garbage."""
-    with pytest.raises(NotImplementedError, match="sliding-window"):
-        Scheduler(params, cfg.scaled(sliding_window=16),
-                  ServingConfig(max_batch=1))
+    """Explicit capability boundaries: multimodal prefill inputs are a
+    ROADMAP follow-on, not silent garbage.  Sliding-window configs are
+    servable since the paged pool landed — they page unconditionally (a
+    windowed slot is a ring over its block list, which the contiguous
+    pool cannot express)."""
     with pytest.raises(NotImplementedError, match="multimodal"):
         Scheduler(params, cfg.scaled(vision_dim=8, n_patches=4),
                   ServingConfig(max_batch=1))
+    sched = Scheduler(params, cfg.scaled(sliding_window=16),
+                      ServingConfig(max_batch=1))
+    assert sched.pool.paged, "windowed configs must auto-page"
 
 
 def test_run_raises_on_stalled_clock(cfg, params):

@@ -1,0 +1,179 @@
+"""Benchmark-regression gate: a fresh BENCH artifact vs the committed baseline.
+
+CI runs ``benchmarks/run.py --suite all --json-out BENCH_partitionpim.json``
+and then ``python benchmarks/check.py BENCH_partitionpim.json``; a
+throughput regression past a row's band (>20% by default; noisy rows
+carry explicit ``tol``/``floor`` overrides, see below) or a
+bit-exactness flip fails the build.
+
+Rows are keyed on (suite, name, pim_mode) — run.py stamps every row with
+its table name and pim mode, so the keys stay stable across PRs even as
+suites are reordered or re-grouped.  Gated fields per row:
+
+* ``tok_s``  — absolute decode throughput.  Fails when
+  ``fresh < (1 - tolerance) * baseline`` (default tolerance 0.20: the
+  ">20% regression" contract).  Absolute tok/s is machine-dependent —
+  after a hardware move, refresh the baseline (below) rather than chase
+  phantom regressions, or loosen via ``--tolerance`` / ``BENCH_TOLERANCE``.
+* ``ratio``  — a within-run speedup (e.g. quant_tp model=8 over
+  single-rank quant).  Machine-independent, gated with the same
+  tolerance; this is the robust signal when hardware shifts.
+* ``bit_exact`` — a baseline ``true`` may never flip to ``false``
+  (tokens/logits diverging from their reference path is a correctness
+  regression regardless of speed).
+
+A row may carry its own ``tol`` (set by run.py where a benchmark's
+measured run-to-run noise exceeds the 20% default — e.g. the smoke-scale
+serving rows, whose wall time is scheduler-overhead-dominated); the
+*baseline* row's ``tol`` wins over the global tolerance, so loosening a
+gate is a reviewed baseline change, never a runtime flag.  A row may
+instead carry an absolute ``floor`` — the gate then checks
+``fresh >= floor`` and skips the relative comparison: the right contract
+for metrics whose run-to-run spread exceeds any sane relative band but
+which must clear a hard requirement (the quant_tp model=8 speedup row
+floors at 1.5x, the acceptance bar, rather than chasing the
+scheduler-noise-inflated ratio of whichever run minted the baseline;
+the smoke-scale serving/tp tok_s rows floor at a quarter of their minted
+value — wide enough for a 2-core box's heavy-tailed scheduler noise,
+tight enough to catch a decode step that recompiles per token; the
+continuous-vs-sequential serving ratios floor at 0.8, because their
+smoke-scale noise reaches ~1.0 and a fully-broken batcher also lands at
+~1.0 — the benchmark's internal ``decode_traces == 1`` assertion and the
+serving test suite carry the sharp signal for that failure mode).
+
+A row present in the baseline but missing from the fresh artifact fails:
+renaming or deleting a benchmark must refresh the baseline deliberately,
+never silently drop coverage.  Fresh-only rows (new benchmarks) pass with
+a note.  Timing columns (``us_per_call``) and ``derived`` strings are
+diagnostics, not gates.
+
+Refreshing the committed baseline (after an intentional perf change, a
+row rename, or a hardware move):
+
+    PYTHONPATH=src python benchmarks/run.py --suite all \\
+        --json-out benchmarks/baseline.json
+
+— or run CI's artifact command and copy it over with
+``python benchmarks/check.py BENCH_partitionpim.json --update`` — then
+commit ``benchmarks/baseline.json`` with a line in the PR body saying why
+the numbers moved.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Tuple
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline.json")
+
+
+def _rows(doc: Dict) -> Dict[str, Dict]:
+    return {k: v for k, v in doc.items() if not k.startswith("_")}
+
+
+def compare(fresh: Dict, baseline: Dict, tolerance: float
+            ) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notes)."""
+    failures: List[str] = []
+    notes: List[str] = []
+    f_rows, b_rows = _rows(fresh), _rows(baseline)
+
+    for name, b in sorted(b_rows.items()):
+        key = (b.get("suite", ""), name, b.get("pim_mode", ""))
+        f = f_rows.get(name)
+        if f is None:
+            failures.append(f"missing row {key}: present in baseline but "
+                            f"not in the fresh artifact (renames must "
+                            f"refresh the baseline)")
+            continue
+        if (f.get("suite", ""), f.get("pim_mode", "")) != (key[0], key[2]):
+            failures.append(
+                f"row {name!r} changed identity: baseline "
+                f"(suite={key[0]}, pim_mode={key[2]}) vs fresh "
+                f"(suite={f.get('suite', '')}, "
+                f"pim_mode={f.get('pim_mode', '')})")
+            continue
+        tol = float(b.get("tol", tolerance))
+        floor = b.get("floor")
+        for field in ("tok_s", "ratio"):
+            bv, fv = b.get(field), f.get(field)
+            if bv is None:
+                continue
+            if fv is None:
+                failures.append(f"{key}: baseline has {field}={bv} but the "
+                                f"fresh row dropped the field")
+            elif floor is not None:
+                if fv < float(floor):
+                    failures.append(
+                        f"{key}: {field} {fv:.3f} fell below the absolute "
+                        f"floor {float(floor):.3f} (baseline {bv:.3f})")
+                elif fv < bv:
+                    notes.append(f"{key}: {field} {bv:.3f} -> {fv:.3f} "
+                                 f"(above floor {float(floor):.3f})")
+            elif fv < (1.0 - tol) * bv:
+                failures.append(
+                    f"{key}: {field} regressed {bv:.3f} -> {fv:.3f} "
+                    f"({fv / bv - 1.0:+.1%}, tolerance -{tol:.0%})")
+            elif fv < bv:
+                notes.append(f"{key}: {field} {bv:.3f} -> {fv:.3f} "
+                             f"(within tolerance)")
+        if b.get("bit_exact") is True and f.get("bit_exact") is not True:
+            failures.append(f"{key}: bit_exact flipped "
+                            f"{b.get('bit_exact')} -> {f.get('bit_exact')}")
+    for name in sorted(set(f_rows) - set(b_rows)):
+        notes.append(f"new row {name!r} (not in baseline; refresh to gate "
+                     f"it)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail on benchmark regressions vs the committed "
+                    "baseline (see module docstring)")
+    ap.add_argument("fresh", help="fresh artifact from benchmarks/run.py "
+                                  "(e.g. BENCH_partitionpim.json)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_TOLERANCE", "0.20")),
+                    help="allowed fractional throughput drop "
+                         "(default 0.20; env BENCH_TOLERANCE)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the fresh artifact over the baseline "
+                         "instead of gating (then commit it)")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"baseline updated from {args.fresh} -> {args.baseline}; "
+              f"commit it")
+        return 0
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures, notes = compare(fresh, baseline, args.tolerance)
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        print(f"\nFAIL: {len(failures)} benchmark regression(s) vs "
+              f"{os.path.basename(args.baseline)} "
+              f"(baseline commit {baseline.get('_meta', {}).get('commit')}, "
+              f"fresh commit {fresh.get('_meta', {}).get('commit')}):")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    n_gated = sum(1 for r in _rows(baseline).values()
+                  if any(k in r for k in ("tok_s", "ratio", "bit_exact")))
+    print(f"OK: {len(_rows(fresh))} rows checked against "
+          f"{len(_rows(baseline))} baseline rows ({n_gated} gated), "
+          f"tolerance {args.tolerance:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

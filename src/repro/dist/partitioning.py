@@ -28,7 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.dist import context as dctx
 
 __all__ = ["param_pspecs", "opt_state_pspecs", "batch_pspecs",
-           "cache_pspecs", "tree_shardings"]
+           "cache_pspecs", "tree_shardings", "tp_shard_dim"]
 
 FSDP_AXIS = "data"
 
@@ -54,13 +54,25 @@ def _pick_dim(shape, divisor: int, taken, *, prefer_late: bool) -> int:
     return best
 
 
+def tp_shard_dim(shape, tp_size: int) -> int:
+    """The dim index ``param_pspecs`` puts on the ``"model"`` axis, or -1.
+
+    Largest dim divisible by ``tp_size``; ties resolve to the *later* dim
+    (column-parallel for square weights).  The ``quant_tp`` execution mode
+    (``repro.kernels.quant_matmul.tp``) keys its shard_map split off the
+    same rule, so a weight's tile split always matches the layout
+    ``param_pspecs`` gave it — no resharding at dispatch.
+    """
+    return _pick_dim(shape, tp_size, set(), prefer_late=True)
+
+
 def _param_spec(shape, mesh, tp_ax: Optional[str], fsdp_ax: Optional[str]
                 ) -> PartitionSpec:
     entries = [None] * len(shape)
     taken = set()
     tp_size = _axis_size(mesh, tp_ax)
     if tp_size > 1:
-        i = _pick_dim(shape, tp_size, taken, prefer_late=True)
+        i = tp_shard_dim(shape, tp_size)
         if i >= 0:
             entries[i] = tp_ax
             taken.add(i)
@@ -134,19 +146,28 @@ def cache_pspecs(caches, mesh, *, batch_over_dp: bool = True):
     pass ``batch_over_dp=False``; heads still shard over "model".  The
     block *table* itself is a tiny replicated int32 array and never gets a
     spec here.
+
+    Quantized-KV *scale* leaves (``k_scale``/``v_scale``) are the KV leaf
+    minus its trailing head-dim axis — ``(n_super, batch, cap, heads)`` —
+    so their head dim is *last*, not ``-2``: they get ``tp`` on ``-1`` to
+    stay aligned with the ``(…, heads, hd)`` values they rescale (putting
+    ``tp`` on ``-2`` would shard the *sequence* dim of the scales against
+    the head-sharded values and force a gather per decode step).
     """
     dp, tp_ax = dctx.mesh_axes(mesh)
 
-    def leaf(s):
+    def leaf(path, s):
         nd = len(s.shape)
         entries = [None] * nd
         if nd >= 2 and batch_over_dp:
             entries[1] = dp
         if nd >= 4 and tp_ax:
-            entries[-2] = tp_ax
+            name = str(getattr(path[-1], "key", path[-1])) if path else ""
+            entries[-1 if name.endswith("_scale") else -2] = tp_ax
         return dctx.pspec_for(mesh, s.shape, *entries)
 
-    return jax.tree.map(leaf, caches, is_leaf=_is_shape_leaf)
+    return jax.tree_util.tree_map_with_path(leaf, caches,
+                                            is_leaf=_is_shape_leaf)
 
 
 def tree_shardings(spec_tree, mesh):

@@ -11,10 +11,17 @@ __all__ = ["quantize_sym", "quant_linear", "quant_matmul_int",
            "quant_matmul_ref", "quant_matmul_int_ref"]
 
 
-def quantize_sym(x: jnp.ndarray, axis: int, bits: int = 8):
-    """Symmetric per-channel quantization -> (int8 values, f32 scales)."""
+def quantize_sym(x: jnp.ndarray, axis: int, bits: int = 8, amax=None):
+    """Symmetric per-channel quantization -> (int8 values, f32 scales).
+
+    ``amax`` overrides the per-channel abs-max (keepdims shape) — the
+    tensor-parallel tiles pass a cross-shard ``pmax`` here so every rank
+    quantizes against the *global* range while this function stays the
+    single source of truth for the eps/round/clip convention.
+    """
     qmax = 2 ** (bits - 1) - 1
-    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    if amax is None:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
     scale = jnp.maximum(amax, 1e-8) / qmax
     q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
     return q, jnp.squeeze(scale, axis=axis).astype(jnp.float32)

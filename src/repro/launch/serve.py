@@ -21,7 +21,9 @@ single-slot writes and steady-state decode never gathers the caches.
 ``--pim-mode`` threads a ``repro.pim.engine`` lowering mode through the
 config (e.g. ``pim_sim`` decodes on the bit-accurate crossbar simulator,
 whose persistent ``ExecutionSession`` uploads crossbar state once per
-artifact and streams only operand columns per token).
+artifact and streams only operand columns per token; ``quant_tp`` decodes
+on per-rank int8 Pallas tiles shard_mapped over the mesh "model" axis —
+pair it with ``--model-parallel``).
 """
 from __future__ import annotations
 
@@ -72,8 +74,10 @@ def main():
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate in req/s (0: closed batch)")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--pim-mode", choices=["xla", "quant", "pim_sim"],
-                    default=None)
+    ap.add_argument("--pim-mode", choices=list(engine.MODES), default=None,
+                    help="linear lowering; quant_tp shards per-rank int8 "
+                         "Pallas tiles over the mesh 'model' axis "
+                         "(set --model-parallel > 1)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--paged", action="store_true",
                     help="block-paged KV pool (admits reserve blocks from "
@@ -140,6 +144,16 @@ def main():
             info = engine.cache_info()
             print(f"[pim] crossbar uploads {info.exec_uploads}, "
                   f"weight-stationary session hits {info.exec_hits}")
+        if args.pim_mode == "quant_tp" and mesh is not None:
+            from repro.kernels.quant_matmul.tp import tile_summary
+
+            r = mesh.shape.get("model", 1)
+            if r > 1:
+                for line in tile_summary(cfg, r):
+                    print(f"[tp] {line} x{r} ranks")
+            else:
+                print("[tp] model axis is 1: quant_tp fell back to "
+                      "single-rank quant (set --model-parallel > 1)")
         if args.sequential:
             # replay the same trace: keep relative arrival offsets so both
             # runs are gated by the identical Poisson process

@@ -30,6 +30,7 @@ from repro.dist import partitioning as dpart
 from repro.models import model_lib as M
 from repro.models.layers import as_shapes
 from repro.optim.adamw import AdamWConfig, apply_updates, init_state
+from repro.pim import engine
 from repro.runtime.fault_tolerance import (CheckpointManager, ElasticMesh,
                                            StragglerMonitor)
 
@@ -84,10 +85,11 @@ def main():
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="tensor-parallel degree on multi-device runs "
                          "(degraded automatically if devices don't divide)")
-    ap.add_argument("--pim-mode", choices=["xla", "quant", "pim_sim"],
-                    default=None,
+    ap.add_argument("--pim-mode", choices=list(engine.MODES), default=None,
                     help="repro.pim.engine lowering for every linear "
-                         "(threaded through ModelConfig.pim_mode)")
+                         "(threaded through ModelConfig.pim_mode); quant_tp "
+                         "shards int8 tiles over the 'model' axis and "
+                         "trains via its straight-through custom_vjp")
     args = ap.parse_args()
 
     # Single-device runs skip mesh machinery entirely; multi-device runs get

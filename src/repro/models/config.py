@@ -95,8 +95,10 @@ class ModelConfig:
     unembed_chunk: int = 0           # vocab-axis chunk for the loss-path
                                      # unembed (0: single full-width einsum)
     # PIM lowering for every linear in the stack: None inherits the ambient
-    # repro.pim.engine.mode(...) context; "xla" | "quant" | "pim_sim" pin it
-    # (MaxText-style quantization-config threading).
+    # repro.pim.engine.mode(...) context; "xla" | "quant" | "quant_tp" |
+    # "pim_sim" pin it (MaxText-style quantization-config threading).
+    # "quant_tp" runs per-rank int8 Pallas tiles shard_mapped over the mesh
+    # "model" axis (falls back to "quant" outside a mesh).
     pim_mode: Optional[str] = None
     # training
     max_seq_len: int = 8_192

@@ -11,6 +11,11 @@ through ``repro.pim.engine`` — there is no process-wide global:
 * ``"xla"``      — plain einsum (default);
 * ``"quant"``    — the int8 Pallas kernel (fixed-point arithmetic, the TPU
   analogue of the crossbar's integer representation);
+* ``"quant_tp"`` — the same int8 arithmetic as per-rank Pallas tiles
+  ``shard_map``-ped over the mesh "model" axis (the paper's partition
+  parallelism at mesh level; ``engine.get_backend("quant_tp")``) — falls
+  back to (and is bit-identical with) ``"quant"`` when no tensor axis is
+  active;
 * ``"pim_sim"``  — the actual MultPIM gate programs on the bit-accurate
   crossbar simulator, via ``engine.sim_linear``'s ``jax.pure_callback``
   route, so it traces under ``jax.jit`` (tiny shapes; examples/tests).
@@ -129,6 +134,8 @@ def linear(x, w, b=None, *, mode: Optional[str] = None):
         from repro.kernels.quant_matmul import quant_linear
 
         y = quant_linear(x, w.astype(jnp.float32))
+    elif mode == "quant_tp":
+        y = engine.get_backend("quant_tp")(x, w.astype(jnp.float32))
     elif mode == "pim_sim":
         y = engine.sim_linear(x, w)
     else:

@@ -526,7 +526,14 @@ def _unembed_table(params, cfg):
 def _pim_ctx(cfg: ModelConfig):
     """Thread ``cfg.pim_mode`` into the trace (MaxText-style config
     threading): every ``linear`` below the entry point resolves against it.
-    ``None`` defers to the caller's ambient ``pim.engine.mode`` context."""
+    ``None`` defers to the caller's ambient ``pim.engine.mode`` context.
+
+    Every entry point — ``loss_fn``, ``prefill``, ``decode_step``, and the
+    serving runtime's jitted ``decode_step_slots`` (contiguous *and*
+    block-paged) — wraps its trace in this context, so a mode like
+    ``"quant_tp"`` reaches the linears inside the ``lax.scan`` layer stack
+    end to end; its shard_map tiles read the active mesh at the same trace
+    time the ``dist`` sharding constraints do."""
     if cfg.pim_mode is None:
         return contextlib.nullcontext()
     from repro.pim import engine

@@ -24,20 +24,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import context as dctx
+from repro.dist.context import SM_CHECK_KW as _SM_CHECK_KW
+from repro.dist.context import shard_map
 from repro.models.layers import activation
-
-try:  # jax>=0.6 moved shard_map to jax.shard_map
-    from jax import shard_map as _shard_map_mod  # type: ignore
-
-    shard_map = jax.shard_map
-except Exception:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
-
-import inspect
-
-# jax < 0.6 calls the replication-check knob check_rep; newer jax check_vma
-_SM_CHECK_KW = ("check_vma" if "check_vma"
-                in inspect.signature(shard_map).parameters else "check_rep")
 
 
 def _local_moe(x, top_ids, top_w, w1, w2, w3, *, n_experts_global: int,

@@ -17,6 +17,27 @@ control, execution).  This module is the driving side, as one API:
   ``"unrolled"`` XLA-compiles one op per microcode row — fast per step but
   compile time grows with program length, so reserve it for short programs
   (the benchmark uses it to measure exactly that trade-off).
+
+  Registered backends (one registry = one dispatch point; "state" backends
+  map ``(crossbar_state, microcode) -> state``, "linear" backends map
+  ``(x, w) -> y`` and are dispatched by ``models.layers.linear``):
+
+  ==========  ======  ==========  =========  ==============================
+  backend     kind    jit         shard_map  grad
+  ==========  ======  ==========  =========  ==============================
+  scan/jnp    state   yes         yes        no (integer state)
+  unrolled    state   traced-only yes        no (integer state)
+  pallas      state   yes         yes        no (integer state)
+  numpy       state   host-only   n/a        no (the ``pure_callback``
+                                             route; see ``sim_linear``)
+  quant_tp    linear  yes         IS one     straight-through custom_vjp
+  ==========  ======  ==========  =========  ==============================
+
+  (The "quant" and "pim_sim" *modes* lower through
+  ``kernels.quant_matmul.quant_linear`` — jit yes, shard_map yes,
+  grad no — and :func:`sim_linear` — jit via ``pure_callback``,
+  shard_map yes, straight-through grad — respectively; they predate the
+  registry and keep their direct call sites in ``models.layers``.)
 * :class:`ExecutionSession` / :func:`session_for` — persistent execution:
   crossbar state stays resident across ``execute`` calls, keyed per
   (geometry, weight) — a crossbar array in real PIM *is* a weight matrix —
@@ -30,10 +51,14 @@ control, execution).  This module is the driving side, as one API:
   token.
 * :func:`mode` / :func:`current_mode` — an explicit, exception-safe context
   manager selecting how ``models.layers.linear`` lowers a matmul
-  (``"xla"`` | ``"quant"`` | ``"pim_sim"``), replacing the old
-  process-wide mutable mode dict.  ``ModelConfig.pim_mode`` threads the same selection
-  through configs (MaxText-style quantization-config threading); an
-  explicit config field wins over the ambient context.
+  (``"xla"`` | ``"quant"`` | ``"quant_tp"`` | ``"pim_sim"``), replacing the
+  old process-wide mutable mode dict.  ``ModelConfig.pim_mode`` threads the
+  same selection through configs (MaxText-style quantization-config
+  threading); an explicit config field wins over the ambient context.
+  ``"quant_tp"`` is the tensor-parallel quant path: per-rank int8 Pallas
+  tiles over the mesh "model" axis (the crossbar-partition analogue at
+  mesh level), registered as the ``"quant_tp"`` backend and bit-identical
+  to ``"quant"`` at model=1 or outside a mesh.
 * :func:`sim_linear` — the bit-accurate crossbar linear, routed through
   ``jax.pure_callback`` with exact result shapes so it composes with
   ``jax.jit`` (the old implementation called ``jax.device_get`` on tracers
@@ -65,6 +90,7 @@ __all__ = [
     "clear_cache",
     "register_backend",
     "get_backend",
+    "backend_kind",
     "backends",
     "execute",
     "execute_state",
@@ -82,7 +108,7 @@ __all__ = [
 # execution-mode selection (replaces the old process-wide mode global)
 # ==========================================================================
 
-MODES = ("xla", "quant", "pim_sim")
+MODES = ("xla", "quant", "quant_tp", "pim_sim")
 _DEFAULT_MODE = "xla"
 
 
@@ -251,17 +277,27 @@ def clear_cache() -> None:
 # backend registry
 # ==========================================================================
 
-# A backend maps (state, microcode, **kw) -> new state, where state is the
-# bit-packed (C, n, W) uint32 crossbar tensor and microcode the (G, 4) rows.
+# A "state" backend maps (state, microcode, **kw) -> new state, where state
+# is the bit-packed (C, n, W) uint32 crossbar tensor and microcode the
+# (G, 4) rows; a "linear" backend maps (x, w, **kw) -> y over float
+# operands and is dispatched by models.layers.linear (see the registry
+# table in the module docstring).  One registry, tagged kinds: picking a
+# name of the wrong kind at a dispatch point is a clear error, not a shape
+# explosion deep in a kernel.
 Backend = Callable[..., "object"]
 
 _backends: Dict[str, Backend] = {}
+_backend_kinds: Dict[str, str] = {}
 _backends_lock = threading.Lock()
 
 
-def register_backend(name: str, fn: Backend) -> None:
+def register_backend(name: str, fn: Backend, *, kind: str = "state") -> None:
+    if kind not in ("state", "linear"):
+        raise ValueError(f"backend kind must be 'state' or 'linear', "
+                         f"got {kind!r}")
     with _backends_lock:
         _backends[name] = fn
+        _backend_kinds[name] = kind
 
 
 _defaults_registered = False
@@ -288,12 +324,24 @@ def _ensure_default_backends() -> None:
         return crossbar_exec(state, jnp.asarray(microcode, jnp.int32),
                              w_tile=kw.get("w_tile", 128))
 
+    def quant_tp(x, w, **kw):
+        # linear-lowering backend (see the registry table in the module
+        # docstring): operands are (x, w) float arrays, not crossbar state.
+        # models.layers.linear dispatches mode "quant_tp" here; the tile
+        # shards over the active mesh's "model" axis at trace time.
+        from repro.kernels.quant_matmul.tp import tp_quant_linear
+
+        return tp_quant_linear(x, w, **kw)
+
     with _backends_lock:
-        _backends.setdefault("scan", scan)
-        _backends.setdefault("jnp", scan)          # historical alias
-        _backends.setdefault("unrolled", unrolled)
-        _backends.setdefault("pallas", pallas)
-        _backends.setdefault("numpy", _numpy_interpret)
+        for nm, fn, kind in (("scan", scan, "state"),
+                             ("jnp", scan, "state"),  # historical alias
+                             ("unrolled", unrolled, "state"),
+                             ("pallas", pallas, "state"),
+                             ("numpy", _numpy_interpret, "state"),
+                             ("quant_tp", quant_tp, "linear")):
+            _backends.setdefault(nm, fn)
+            _backend_kinds.setdefault(nm, kind)
         # only after everything registered: a failed import above leaves the
         # flag unset so the next call retries, and a concurrent caller never
         # observes the flag without the backends
@@ -345,8 +393,22 @@ def backends() -> Tuple[str, ...]:
         return tuple(sorted(_backends))
 
 
+def backend_kind(name: str) -> str:
+    """``"state"`` or ``"linear"`` (see the registry comment above)."""
+    _ensure_default_backends()
+    with _backends_lock:
+        if name not in _backends:
+            raise ValueError(f"unknown backend {name!r}; "
+                             f"registered: {sorted(_backends)}")
+        return _backend_kinds.get(name, "state")
+
+
 def execute_state(state, microcode, *, backend: str = "scan", **kw):
     """Run flat microcode over raw crossbar state on the chosen backend."""
+    if backend_kind(backend) != "state":
+        raise ValueError(
+            f"backend {backend!r} is a linear lowering ((x, w) -> y), not a "
+            f"crossbar-state executor; it cannot run microcode")
     return get_backend(backend)(state, microcode, **kw)
 
 

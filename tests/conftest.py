@@ -24,6 +24,22 @@ if importlib.util.find_spec("hypothesis") is None:
 
 import pytest  # noqa: E402
 
+# CI's tier-1 matrix pins PIM_TEST_MODE to one engine mode per job
+# (.github/workflows/ci.yml) so a backend regression pinpoints its mode;
+# locally (unset) the mode-sensitive suites parametrize over every mode.
+# Comma lists work too: PIM_TEST_MODE=quant,quant_tp.
+_ALL_PIM_MODES = ["xla", "quant", "quant_tp", "pim_sim"]
+PIM_TEST_MODES = [m for m in
+                  os.environ.get("PIM_TEST_MODE", "").replace(" ", "")
+                  .split(",") if m] or _ALL_PIM_MODES
+
+
+def pytest_generate_tests(metafunc):
+    # any test taking a ``pim_test_mode`` argument fans out over the
+    # selected engine modes (tests/test_pim_modes.py is the main consumer)
+    if "pim_test_mode" in metafunc.fixturenames:
+        metafunc.parametrize("pim_test_mode", PIM_TEST_MODES)
+
 
 def pytest_configure(config):
     config.addinivalue_line(

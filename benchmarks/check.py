@@ -33,6 +33,12 @@ for metrics whose run-to-run spread exceeds any sane relative band but
 which must clear a hard requirement (the quant_tp model=8 speedup row
 floors at 1.5x, the acceptance bar, rather than chasing the
 scheduler-noise-inflated ratio of whichever run minted the baseline;
+the prefix-cache warm-vs-cold TTFT rows floor at 2.0x — the acceptance
+bar for trie-hit admits skipping the shared prompt's prefill — and their
+blocks-shared reuse ratios floor at 0.9, which is deterministic for the
+suite's fixed trace so any dip means the index stopped matching; their
+``bit_exact`` flags gate warm generations staying token-identical to the
+no-prefix-cache paged pool;
 the smoke-scale serving/tp tok_s rows floor at a quarter of their minted
 value — wide enough for a 2-core box's heavy-tailed scheduler noise,
 tight enough to catch a decode step that recompiles per token; the

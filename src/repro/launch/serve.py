@@ -11,7 +11,10 @@ throughput comparison.  ``--paged`` swaps in the block-paged KV pool
 (``--block-size`` / ``--num-blocks``): long-tail prompts reserve only
 their own block need instead of worst-case slots, and sliding-window
 architectures — which page unconditionally — serve as rings over their
-block lists.
+block lists.  ``--prefix-cache`` (implies paged) attaches the trie prefix
+index with copy-on-write sharing — pair it with ``--shared-prefix N`` to
+give every synthetic prompt one N-token system prompt and watch warm
+admits skip its prefill entirely.
 
 CPU-runnable with ``--smoke``/``--preset``.  On multi-device runs the
 driver enters the ``ElasticMesh`` (same policy as ``launch/train.py``);
@@ -43,11 +46,11 @@ from repro.serving import Scheduler, ServingConfig, synthetic_requests
 
 def serve_trace(params, cfg, requests, *, max_batch: int, prompt_bucket: int,
                 mesh=None, paged: bool = False, block_size: int = 16,
-                num_blocks=None):
+                num_blocks=None, prefix_cache: bool = False):
     """Run a request trace through the scheduler; returns (results, summary)."""
     scfg = ServingConfig(max_batch=max_batch, prompt_bucket=prompt_bucket,
                          paged=paged, block_size=block_size,
-                         num_blocks=num_blocks)
+                         num_blocks=num_blocks, prefix_cache=prefix_cache)
     sched = Scheduler(params, cfg, scfg, mesh=mesh)
     for req in requests:
         sched.submit_request(req)
@@ -90,6 +93,13 @@ def main():
                     help="physical KV blocks (default: full parity with "
                          "the contiguous pool; smaller oversubscribes and "
                          "defers admissions under pressure)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="trie prefix index over the paged pool with "
+                         "refcounted copy-on-write block sharing; matched "
+                         "prompt blocks skip prefill (implies --paged)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend one fixed N-token system prompt to every "
+                         "synthetic request (the prefix-cache workload)")
     ap.add_argument("--sequential", action="store_true",
                     help="also run the trace one-request-at-a-time "
                          "(max_batch=1) for an A/B comparison")
@@ -107,13 +117,14 @@ def main():
         cfg = cfg.scaled(pim_mode=args.pim_mode)
     # right-size the cache pool: capacity = longest prompt + budget (decode
     # attention cost scales with pool capacity, not with tokens generated)
-    cfg = cfg.scaled(max_seq_len=args.prompt_len + args.gen)
+    cfg = cfg.scaled(max_seq_len=args.shared_prefix + args.prompt_len
+                     + args.gen)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     plens = sorted({max(1, args.prompt_len * f // 4) for f in (1, 2, 3, 4)})
     requests = synthetic_requests(
         args.requests, vocab_size=cfg.vocab_size, prompt_lens=plens,
         max_new_tokens=args.gen, rate=args.rate, seed=args.seed,
-        start_time=time.monotonic())
+        start_time=time.monotonic(), shared_prefix_len=args.shared_prefix)
 
     # recurrent blocks fold right-padding into their state: serve those
     # unbucketed (exact; one prefill compile per distinct prompt length)
@@ -123,7 +134,8 @@ def main():
         results, summary = serve_trace(
             params, cfg, requests, max_batch=args.batch,
             prompt_bucket=bucket, mesh=mesh, paged=args.paged,
-            block_size=args.block_size, num_blocks=args.num_blocks)
+            block_size=args.block_size, num_blocks=args.num_blocks,
+            prefix_cache=args.prefix_cache)
         print(f"served {summary['n_finished']}/{summary['n_requests']} "
               f"requests, {summary['total_tokens']} tokens @ "
               f"{summary['tokens_per_s']:.0f} tok/s "
@@ -133,13 +145,22 @@ def main():
               f"TPOT {summary['mean_tpot_s'] * 1e3:.1f}ms | "
               f"queue wait {summary['mean_queue_wait_s'] * 1e3:.0f}ms | "
               f"active slots {summary['mean_active_slots']:.1f}")
-        if args.paged or cfg.sliding_window:
+        if args.paged or args.prefix_cache or cfg.sliding_window:
             print(f"[pool] peak KV {summary['peak_kv_bytes'] / 1e6:.2f}MB "
                   f"(peak {summary['peak_pool_blocks']:.0f} blocks, "
                   f"occupancy {summary['mean_block_occupancy'] * 100:.0f}%, "
                   f"internal frag "
                   f"{summary['mean_internal_frag'] * 100:.0f}%, "
                   f"{summary['deferred_admits']} deferred admits)")
+        if args.prefix_cache:
+            print(f"[prefix] hit rate "
+                  f"{summary['prefix_hit_rate'] * 100:.0f}% | "
+                  f"{summary['prefix_tokens_reused']:.0f} prompt tokens "
+                  f"served from the index | TTFT hit "
+                  f"{summary['mean_ttft_hit_s'] * 1e3:.0f}ms vs miss "
+                  f"{summary['mean_ttft_miss_s'] * 1e3:.0f}ms | "
+                  f"{summary['peak_blocks_shared']:.0f} blocks shared, "
+                  f"{summary['cow_copies']:.0f} COW copies")
         if args.pim_mode == "pim_sim":
             info = engine.cache_info()
             print(f"[pim] crossbar uploads {info.exec_uploads}, "

@@ -301,6 +301,36 @@ def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
         window = cfg.sliding_window if causal else None
         attn_fn = attn.flash_attention if cfg.flash_attention \
             else attn.direct_attention
+        if mode == "prefill" and cache is not None:
+            # Prefix-resume prefill (prefix caching): ``cache`` holds the
+            # shared prompt prefix KV — dense, post-RoPE, positions
+            # 0..m-1, gathered by ``PagedCachePool.read_prefix`` — and the
+            # caller shifted ``positions`` by m, so q/k here are already
+            # rotated at absolute positions m..m+s-1.  Queries attend
+            # concat(prefix, tail) with ``q_offset=m``; the emitted cache
+            # is the *tail only*, unpadded — the paged pool scatters it at
+            # block offset m (``assign_tail``) without touching the shared
+            # prefix blocks.
+            m_len = cache["k"].shape[1]
+            if quant:
+                pk = _dequantize_kv(cache["k"], cache["k_scale"],
+                                    cfg.compute_dtype)
+                pv = _dequantize_kv(cache["v"], cache["v_scale"],
+                                    cfg.compute_dtype)
+            else:
+                pk, pv = cache["k"].astype(k.dtype), cache["v"].astype(v.dtype)
+            out = attn_fn(q, jnp.concatenate([pk, k], axis=1),
+                          jnp.concatenate([pv, v], axis=1),
+                          causal=causal, window=window, q_offset=m_len)
+            if quant:
+                kq, ks = _quantize_kv(k)
+                vq, vs = _quantize_kv(v)
+                new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                new_cache = {"k": k.astype(cfg.compute_dtype),
+                             "v": v.astype(cfg.compute_dtype)}
+            y = linear(out.reshape(b, s, h * hd), p["wo"])
+            return x + y, new_cache
         out = attn_fn(q, k, v, causal=causal, window=window)
         if mode == "prefill":
             if cfg.sliding_window:
@@ -590,7 +620,7 @@ def _loss_fn(params, batch, cfg: ModelConfig):
     return nll.sum() / n_tok
 
 
-def prefill(params, batch, cfg: ModelConfig, last_index=None):
+def prefill(params, batch, cfg: ModelConfig, last_index=None, prefix=None):
     """Forward the prompt; return (last-token logits, caches).
 
     ``last_index`` — optional (B,) int32 index of each request's last real
@@ -602,14 +632,28 @@ def prefill(params, batch, cfg: ModelConfig, last_index=None):
     sliding-window cache keeps pad KV inside its ring once the padded
     length exceeds the window — the serving scheduler buckets windowed
     prompts only while ``padded <= window`` and enforces the rest.
+
+    ``prefix`` — optional mapped-prefix KV tree (``{layer: {"k": (ns, 1,
+    m, ...), ...}}`` per super-block, as returned by
+    ``PagedCachePool.read_prefix``): ``batch["tokens"]`` is then the
+    *divergent tail* of the prompt, resumed at absolute position ``m`` —
+    positions/RoPE shift by ``m``, attention reads concat(prefix, tail)
+    keys, and the returned caches hold the tail only (the paged pool
+    scatters them at block offset ``m``).  ``m`` must be block-aligned
+    and positive; full-attention stacks only (the caller gates recurrent
+    and MoE configs, whose state/KV is not prefix-separable).
     """
     with _pim_ctx(cfg):
         tokens = batch["tokens"]
         x = _embed_in(params, tokens, cfg)
         memory = _memory(params, batch, cfg)
-        positions = jnp.arange(tokens.shape[1])
+        off = 0
+        if prefix is not None:
+            off = jax.tree.leaves(prefix)[0].shape[2]
+        positions = off + jnp.arange(tokens.shape[1])
         x, caches = _decoder_stack(params, x, cfg, positions=positions,
-                                   mode="prefill", memory=memory)
+                                   mode="prefill", memory=memory,
+                                   caches=prefix)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         if last_index is None:
             xl = x[:, -1]

@@ -25,6 +25,7 @@ class RequestMetrics:
     last_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     n_tokens: int = 0
+    prefix_tokens: int = 0      # prompt tokens served from the prefix index
 
     @property
     def ttft(self) -> float:
@@ -61,8 +62,11 @@ class ServingMetrics:
     def on_submit(self, rid: int, now: float) -> None:
         self.requests[rid] = RequestMetrics(rid=rid, arrival_time=now)
 
-    def on_admit(self, rid: int, now: float) -> None:
-        self.requests[rid].admit_time = now
+    def on_admit(self, rid: int, now: float,
+                 prefix_tokens: int = 0) -> None:
+        r = self.requests[rid]
+        r.admit_time = now
+        r.prefix_tokens = prefix_tokens
 
     def on_token(self, rid: int, now: float) -> None:
         r = self.requests[rid]
@@ -80,11 +84,16 @@ class ServingMetrics:
 
     def sample_pool(self, stats: Dict[str, float],
                     tokens_live: float = math.nan) -> None:
-        """Record one cache-pool occupancy snapshot (``CachePool.stats()``
+        """Record one cache-pool occupancy snapshot (``*Pool.stats()``
         shape: kv_bytes_in_use/reserved, blocks_in_use/total,
-        tokens_reserved).  ``tokens_live`` — positions actually written —
-        lets the summary report internal fragmentation (reserved-but-
-        unwritten token slots inside allocated blocks)."""
+        ``tokens_reserved`` — the *logical* per-slot reservation, a shared
+        block counted once per referencing slot — and ``tokens_in_use`` —
+        physical, each allocated block once; the paged pool adds
+        blocks_shared / prefix_blocks / cow_copies).  ``tokens_live`` —
+        positions actually written — lets the summary report internal
+        fragmentation (reserved-but-unwritten token slots inside allocated
+        blocks; the logical reservation is the right denominator, a trie
+        hit must not read as fragmentation)."""
         self.pool_samples.append(dict(stats, tokens_live=tokens_live))
 
     def on_deferred_admit(self) -> None:
@@ -117,6 +126,13 @@ class ServingMetrics:
             [1.0 - p["tokens_live"] / p["tokens_reserved"]
              for p in self.pool_samples
              if p["tokens_reserved"] and not math.isnan(p["tokens_live"])])
+        admitted = [r for r in rs if r.admit_time is not None]
+        hits = [r for r in admitted if r.prefix_tokens > 0]
+        misses = [r for r in admitted if r.prefix_tokens == 0]
+        peak_shared = max((p.get("blocks_shared", 0.0)
+                           for p in self.pool_samples), default=0.0)
+        cow = max((p.get("cow_copies", 0.0)
+                   for p in self.pool_samples), default=0.0)
         return {
             "n_requests": len(rs),
             "n_finished": len(done),
@@ -137,4 +153,15 @@ class ServingMetrics:
             "mean_block_occupancy": occ,
             "mean_internal_frag": frag,
             "deferred_admits": self.deferred_admits,
+            # prefix caching: hit rate over admitted requests, prompt
+            # tokens served straight from the index (no prefill compute),
+            # and the TTFT split that the warm/cold benchmark gate reads
+            "prefix_hit_rate": (len(hits) / len(admitted) if admitted
+                                else math.nan),
+            "prefix_tokens_reused": float(sum(r.prefix_tokens
+                                              for r in admitted)),
+            "mean_ttft_hit_s": self._mean([r.ttft for r in hits]),
+            "mean_ttft_miss_s": self._mean([r.ttft for r in misses]),
+            "peak_blocks_shared": peak_shared,
+            "cow_copies": cow,
         }

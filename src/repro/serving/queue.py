@@ -81,22 +81,33 @@ class AdmissionQueue:
 
 def synthetic_requests(n: int, *, vocab_size: int, prompt_lens: Sequence[int],
                        max_new_tokens: int = 16, rate: float = 0.0,
-                       seed: int = 0, start_time: float = 0.0
-                       ) -> List[Request]:
+                       seed: int = 0, start_time: float = 0.0,
+                       shared_prefix_len: int = 0) -> List[Request]:
     """A deterministic synthetic trace: random prompts, Poisson arrivals.
 
     ``rate`` is the arrival rate in requests/second (exponential
     inter-arrival gaps); 0 puts every request at ``start_time`` (a closed
     batch).  Prompt lengths cycle through ``prompt_lens``.
+
+    ``shared_prefix_len`` > 0 prepends one fixed random token run of that
+    length to every prompt — a shared system prompt, the prefix-caching
+    workload; ``prompt_lens`` then size each request's divergent tail.
+    The shared run is drawn first, so traces built with the same ``seed``
+    and ``shared_prefix_len`` share it across calls (warm-up vs measured
+    trace in the benchmarks).
     """
     rng = np.random.default_rng(seed)
+    shared = (rng.integers(0, vocab_size, size=(shared_prefix_len,),
+                           dtype=np.int64)
+              if shared_prefix_len > 0 else None)
     t = start_time
     out: List[Request] = []
     for i in range(n):
         if rate > 0 and i > 0:
             t += float(rng.exponential(1.0 / rate))
         plen = int(prompt_lens[i % len(prompt_lens)])
+        tail = rng.integers(0, vocab_size, size=(plen,), dtype=np.int64)
         out.append(make_request(
-            rng.integers(0, vocab_size, size=(plen,), dtype=np.int64),
+            tail if shared is None else np.concatenate([shared, tail]),
             max_new_tokens, arrival_time=t))
     return out

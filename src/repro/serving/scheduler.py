@@ -26,7 +26,18 @@ and *defer* when it runs short, evictions return blocks, and the decode
 step reads through a fixed-shape block table — still exactly one trace.
 Sliding-window configs serve as rings over their block lists and enable
 paging automatically (prompts bucket only while the padded length stays
-inside the window).  Under ``pim_mode="pim_sim"`` the decode step's
+inside the window).  ``ServingConfig(prefix_cache=True)`` additionally
+attaches the pool's prefix index: admission walks a trie over the prompt
+tokens, maps every fully matched block into the slot by reference, and
+prefills only the divergent tail (``prefill(prefix=...)`` resumed at the
+block-aligned match length) — on shared-system-prompt traces this turns
+most of the prompt's TTFT cost into one block-table write.  Shared blocks
+are copy-on-write: before each decode step the scheduler upgrades any
+slot about to write into one (``ensure_writable``), so trie hits, forks,
+and windowed ring wraps never corrupt other referents.  Tail prefill
+retraces once per (match length, tail bucket) pair — cheap when prompts
+share a few long system prefixes, which is the workload prefix caching
+is for.  Under ``pim_mode="pim_sim"`` the decode step's
 crossbar GEMMs
 run through the engine's persistent :class:`ExecutionSession` pool:
 crossbar state is uploaded once per artifact and only operand columns
@@ -73,6 +84,7 @@ class ServingConfig:
     paged: bool = False         # block-paged KV pool
     block_size: int = 16        # tokens per KV block (paged pool)
     num_blocks: Optional[int] = None   # physical blocks (None: full parity)
+    prefix_cache: bool = False  # trie prefix sharing + COW (implies paged)
 
 
 class Scheduler:
@@ -94,6 +106,23 @@ class Scheduler:
             raise ValueError(
                 f"{cfg.name}: SSM/xLSTM blocks require prompt_bucket=1 "
                 "(padding folds into the recurrent state)")
+        if scfg.prefix_cache:
+            # prefix sharing assumes a token's KV depends only on the
+            # tokens before it — recurrent state folds the whole prefix
+            # into one vector (nothing block-separable to share), and MoE
+            # capacity dropping makes each token's output depend on its
+            # *batch-mates*, so identical prefixes need not produce
+            # identical KV
+            if cfg.has_recurrent_blocks:
+                raise ValueError(
+                    f"{cfg.name}: prefix_cache is incompatible with "
+                    "SSM/xLSTM blocks (recurrent state is not "
+                    "prefix-separable)")
+            if cfg.n_experts:
+                raise ValueError(
+                    f"{cfg.name}: prefix_cache is incompatible with MoE "
+                    "(capacity dropping couples a token's KV to its "
+                    "batch-mates)")
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
@@ -103,14 +132,16 @@ class Scheduler:
         # sliding-window slots are rings over their block list — only the
         # paged pool can size prefill capacity min(prompt, window), so
         # windowed configs page unconditionally
-        if scfg.paged or cfg.sliding_window:
+        if scfg.paged or scfg.prefix_cache or cfg.sliding_window:
             self.pool = PagedCachePool(
                 cfg, scfg.max_batch, cfg.max_seq_len,
                 block_size=scfg.block_size, num_blocks=scfg.num_blocks,
-                mesh=mesh)
+                mesh=mesh, prefix_cache=scfg.prefix_cache)
         else:
             self.pool = CachePool(cfg, scfg.max_batch, cfg.max_seq_len,
                                   mesh=mesh)
+        self._prefix_on = (scfg.prefix_cache
+                           and getattr(self.pool, "prefix", None) is not None)
 
         B = scfg.max_batch
         self._slot_rid = np.full(B, -1, np.int64)
@@ -131,6 +162,11 @@ class Scheduler:
         self._prefill = jax.jit(
             lambda p, toks, li: M.prefill(p, {"tokens": toks}, cfg,
                                           last_index=li))
+        # tail-resume prefill against a mapped prefix; retraces once per
+        # (prefix length, tail bucket) shape pair
+        self._prefill_resume = jax.jit(
+            lambda p, toks, li, px: M.prefill(p, {"tokens": toks}, cfg,
+                                              last_index=li, prefix=px))
 
     # ------------------------------------------------------------------
 
@@ -181,6 +217,17 @@ class Scheduler:
             return b if b <= w else plen
         return min(b, self.pool.max_len)
 
+    def _bucket_tail(self, tlen: int, m: int) -> int:
+        """Bucket for the divergent tail of a trie-hit prompt.  The tail
+        prefill emits an unpadded-to-capacity cache and the pool masks pad
+        positions out at scatter time, so — unlike cold windowed prefill —
+        padding past the window is harmless here; only the slot's logical
+        capacity beyond the prefix bounds it."""
+        bq = max(1, self.scfg.prompt_bucket)
+        b = ((tlen + bq - 1) // bq) * bq
+        cap = getattr(self.pool, "lcap", self.pool.max_len) - m
+        return max(tlen, min(b, cap))
+
     def _finish(self, slot: int, now: float) -> None:
         self.metrics.on_finish(int(self._slot_rid[slot]), now)
         self._slot_rid[slot] = -1
@@ -192,30 +239,56 @@ class Scheduler:
         FIFO with back-pressure: when the paged pool's free list cannot
         cover the head request's block reservation, admission *defers*
         (the head stays queued — no skip-ahead, no crash) until evictions
-        return enough blocks.
+        return enough blocks.  With ``prefix_cache``, the head's prompt is
+        first walked through the pool's trie: matched blocks are mapped by
+        reference and only the divergent tail is prefilled.  A request
+        that finishes at admit (budget 1, or EOS as its first token) never
+        occupies a slot, so the *same* slot is retried with the next
+        queued request — a burst of one-token requests drains in a single
+        scheduler step instead of one per step.
         """
         emitted: List[Tuple[int, int]] = []
-        for slot in np.flatnonzero(~self.active_slots):
+        free = iter(np.flatnonzero(~self.active_slots))
+        slot = next(free, None)
+        while slot is not None:
             head = self.queue.peek()
             if head is None or head.arrival_time > self.clock():
                 break
-            if not self.pool.can_admit(head.prompt.shape[0]
-                                       + head.max_new_tokens):
+            n_tok = head.prompt.shape[0] + head.max_new_tokens
+            if self._prefix_on:
+                m, pblocks = self.pool.prefix_match(head.prompt)
+                ok = self.pool.can_admit(n_tok, prefix_tokens=m)
+            else:
+                m, pblocks = 0, []
+                ok = self.pool.can_admit(n_tok)
+            if not ok:
                 if head.rid != self._deferred_rid:   # count requests, not
                     self._deferred_rid = head.rid    # ... steps spent waiting
                     self.metrics.on_deferred_admit()
                 break
             req = self.queue.pop(self.clock())
+            self._deferred_rid = -1    # the deferred head (if any) got in;
+            #                            the next deferral is a new event
             plen = req.prompt.shape[0]
-            bucket = self._bucket(plen)
-            toks = np.full((1, bucket), self.scfg.pad_id, np.int32)
-            toks[0, :plen] = req.prompt
-            logits, cache = self._prefill(
-                self.params, jnp.asarray(toks),
-                jnp.asarray([plen - 1], jnp.int32))
+            if m:
+                tlen = plen - m
+                bucket = self._bucket_tail(tlen, m)
+                toks = np.full((1, bucket), self.scfg.pad_id, np.int32)
+                toks[0, :tlen] = req.prompt[m:]
+                logits, cache = self._prefill_resume(
+                    self.params, jnp.asarray(toks),
+                    jnp.asarray([tlen - 1], jnp.int32),
+                    self.pool.read_prefix(pblocks))
+            else:
+                bucket = self._bucket(plen)
+                toks = np.full((1, bucket), self.scfg.pad_id, np.int32)
+                toks[0, :plen] = req.prompt
+                logits, cache = self._prefill(
+                    self.params, jnp.asarray(toks),
+                    jnp.asarray([plen - 1], jnp.int32))
             first = int(np.asarray(jnp.argmax(logits, -1))[0])
             now = self.clock()
-            self.metrics.on_admit(req.rid, now)
+            self.metrics.on_admit(req.rid, now, prefix_tokens=m)
             self.metrics.on_token(req.rid, now)
             self._outputs[req.rid] = [first]
             emitted.append((req.rid, first))
@@ -223,15 +296,20 @@ class Scheduler:
                     or first == self.scfg.eos_id)
             if done:
                 # finished at admit: never touches a slot (the cache write
-                # would only leave stale KV in a still-free slot)
+                # would only leave stale KV in a still-free slot); retry
+                # the same slot with the next queued request
                 self.metrics.on_finish(req.rid, now)
                 continue
-            self.pool.admit(int(slot), cache, plen,
-                            plen + req.max_new_tokens)
+            if self._prefix_on:
+                self.pool.admit(int(slot), cache, plen, n_tok,
+                                prompt=req.prompt, prefix_blocks=pblocks)
+            else:
+                self.pool.admit(int(slot), cache, plen, n_tok)
             self._slot_rid[slot] = req.rid
             self._tokens[slot, 0] = first
             self._pos[slot] = plen
             self._remaining[slot] = req.max_new_tokens - 1
+            slot = next(free, None)
         return emitted
 
     def step(self) -> List[Tuple[int, int]]:
@@ -242,6 +320,14 @@ class Scheduler:
         emitted = self._admit()
         active = self.active_slots
         if active.any():
+            if self.pool.paged and self.pool.has_shared:
+                # copy-on-write: each active slot writes its KV at _pos
+                # this step — upgrade any shared target block to a private
+                # copy first so sibling slots / the prefix index keep
+                # their bits (cheap host check when nothing is shared)
+                for slot in np.flatnonzero(active):
+                    self.pool.ensure_writable(int(slot),
+                                              int(self._pos[slot]))
             next_tok, _, new_caches = self._decode(
                 self.params, jnp.asarray(self._tokens),
                 jnp.asarray(self._pos), jnp.asarray(active),

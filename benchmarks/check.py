@@ -39,13 +39,26 @@ blocks-shared reuse ratios floor at 0.9, which is deterministic for the
 suite's fixed trace so any dip means the index stopped matching; their
 ``bit_exact`` flags gate warm generations staying token-identical to the
 no-prefix-cache paged pool;
-the smoke-scale serving/tp tok_s rows floor at a quarter of their minted
-value — wide enough for a 2-core box's heavy-tailed scheduler noise,
-tight enough to catch a decode step that recompiles per token; the
-continuous-vs-sequential serving ratios floor at 0.8, because their
-smoke-scale noise reaches ~1.0 and a fully-broken batcher also lands at
-~1.0 — the benchmark's internal ``decode_traces == 1`` assertion and the
-serving test suite carry the sharp signal for that failure mode).
+the smoke-scale serving/tp/replica tok_s rows floor at a quarter of
+their minted value — wide enough for a 2-core box's heavy-tailed
+scheduler noise, tight enough to catch a decode step that recompiles per
+token; the continuous-vs-sequential serving ratios floor at 0.8, because
+their smoke-scale noise reaches ~1.0 and a fully-broken batcher also
+lands at ~1.0 — the benchmark's internal ``decode_traces == 1``
+assertion and the serving test suite carry the sharp signal for that
+failure mode.
+The multi-replica router rows gate the fleet contracts:
+``replica/scaling_4x_vs_1`` floors at the 2.5x acceptance bar — fleet
+tok/s on the router's FleetClock must scale with replicas (the measured
+value is super-linear on the forced-CPU topology, see run.py, so the
+floor polices direction, not the multiple); ``replica/affinity_hit_rate``
+floors at 0.7 — deterministic ~0.875 for the fixed 3-tenant trace, so a
+dip means prefix_affinity stopped pinning tenants to tries; and
+``replica/kill_mid_trace_zero_lost`` is a ``bit_exact`` boolean — a
+mid-trace replica kill must complete the whole trace with zero
+lost/duplicated requests and tokens identical to the single-scheduler
+oracle, so any flip is a drain/requeue correctness regression, never
+noise).
 
 A row present in the baseline but missing from the fresh artifact fails:
 renaming or deleting a benchmark must refresh the baseline deliberately,

@@ -42,8 +42,13 @@ prefix cache on and off, per PIM mode {xla, quant, quant_tp}: warm
 (trie-hit) admits must beat cold mean TTFT by the gated 2x floor, stay
 bit-identical to the no-prefix-cache paged pool, and the blocks-shared
 reuse ratio records how much of the prompt stream the index
-deduplicates; ``--suite all`` runs everything.  All rows land in the
-same JSON artifact.
+deduplicates; ``--suite replica`` measures the multi-replica router on
+the fleet clock (replica={1,2,4} throughput scaling over 8-device
+slices, a prefix-affinity vs round-robin dispatch hit-rate A/B on a
+multi-tenant trace, and a mid-trace replica-kill drill that must finish
+with zero lost requests and tokens bit-identical to a single-scheduler
+oracle); ``--suite all`` runs everything.  All rows land in the same
+JSON artifact.
 """
 from __future__ import annotations
 
@@ -528,6 +533,171 @@ def serving_prefix() -> List[Row]:
     return rows
 
 
+def serving_replica() -> List[Row]:
+    """Multi-replica router: scaling, dispatch A/B, and the kill drill.
+
+    Replicas are independent hosts in a data-parallel fleet; this
+    process steps them sequentially, so throughput is measured on the
+    router's ``FleetClock`` — each replica's step is wall-timed in its
+    own clock segment and fleet time advances **once per round by the
+    slowest segment**, the wall-clock law of independent hosts (the
+    serial dispatch loop is the cheap shared controller).  Three
+    scenario groups land as rows:
+
+    - ``scaling_replica{1,2,4}_tok_s`` + ``scaling_4x_vs_1``: the same
+      closed 32-request trace through 1/2/4 replicas over the 8-device
+      topology (warmed per replica so compiles stay out of the window);
+      the replica=4 / replica=1 ratio gates at the 2.5x acceptance
+      floor.  On this forced-CPU topology the ratio lands *super*-linear
+      (~5-7x): rounds shrink ~4x with the fleet, and the replica=1
+      baseline additionally pays 8-way replicated dispatch for its
+      whole-mesh engine while 2-device replicas pay only 2-way — real
+      fleets see the sub-linear side of 4x, so the floor polices the
+      scaling direction, not the exact multiple.
+    - ``affinity_hit_rate`` vs ``round_robin_hit_rate``: a 3-tenant
+      shared-system-prompt trace over 4 prefix-cached replicas.  Round
+      robin smears every tenant's prefix across all four tries (each
+      replica pays its own cold miss per tenant); ``prefix_affinity``
+      pins each tenant to one replica, so only the first request per
+      tenant misses — aggregate ``prefix_hit_rate`` gates at 0.7 (the
+      deterministic values are ~0.875 vs ~0.5).
+    - ``kill_mid_trace_zero_lost``: replica 0 is killed mid-trace by an
+      injected ``FailurePlan``; its in-flight requests drain back to
+      the global queue and restart elsewhere.  The full trace must
+      complete with zero lost/duplicated requests and per-request
+      tokens **bit-identical** to a single-scheduler oracle run (greedy
+      decode is deterministic given the prompt) — gated as a
+      ``bit_exact`` boolean.
+    """
+    import jax
+    import numpy as np
+
+    import repro.configs as configs
+    from repro.models import model_lib as M
+    from repro.serving import (FailurePlan, Router, RouterConfig, Scheduler,
+                               ServingConfig, ServingMetrics,
+                               synthetic_requests)
+
+    cfg = configs.get("qwen1.5-0.5b").smoke().scaled(max_seq_len=64)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    devices = jax.devices()
+    scfg = ServingConfig(max_batch=4, prompt_bucket=8, paged=True,
+                         block_size=8)
+    n_req, gen = 32, 8
+    trace = dict(vocab_size=cfg.vocab_size, prompt_lens=[6, 10, 14],
+                 max_new_tokens=gen, rate=0.0, seed=3)
+
+    def fleet_run(n_replicas, *, policy="least_loaded", scfg=scfg,
+                  reqs=None, plan=None, warm=True):
+        router = Router(params, cfg, scfg,
+                        RouterConfig(n_replicas=n_replicas, policy=policy),
+                        devices=devices, failure_plan=plan)
+        if warm:
+            # compile every prompt bucket + decode on EVERY replica
+            # outside the timed window: least-loaded dispatch over idle
+            # replicas cycles i%n, and 3 prompt lengths with n in {1,2,4}
+            # are coprime, so 3n warm requests cover the full
+            # (replica, bucket) product — a bucket first compiled
+            # mid-window would land in that round's max and poison the
+            # fleet-clock scaling ratio
+            for r in synthetic_requests(3 * n_replicas,
+                                        vocab_size=cfg.vocab_size,
+                                        prompt_lens=[6, 10, 14],
+                                        max_new_tokens=2, seed=99,
+                                        start_time=router.clock()):
+                router.submit_request(r)
+            router.run()
+            router.results.clear()
+            for rep in router.replicas:
+                rep.sched.metrics = ServingMetrics()
+        if reqs is None:
+            reqs = synthetic_requests(n_req, start_time=router.clock(),
+                                      **trace)
+        for r in reqs:
+            router.submit_request(r)
+        res = router.run()
+        return router, reqs, res
+
+    rows: List[Row] = []
+    tps: Dict[int, float] = {}
+    for n in (1, 2, 4):
+        router, reqs, res = fleet_run(n)
+        assert len(res) == n_req, f"replica={n} lost requests"
+        s = router.metrics().summary()
+        tps[n] = s["tokens_per_s"]
+        per = "/".join(f"{v:.0f}" for _, v in
+                       sorted(s["per_replica_tok_s"].items()))
+        rows.append((f"replica/scaling_replica{n}_tok_s", 0.0,
+                     f"{s['tokens_per_s']:.1f} fleet tok/s over {n} "
+                     f"replica(s) of {8 // n} devices (per-replica {per})",
+                     {"mesh": f"replicas={n}",
+                      "tok_s": round(s["tokens_per_s"], 2),
+                      "floor": round(s["tokens_per_s"] / 4, 1)}))
+    ratio = tps[4] / tps[1]
+    rows.append(("replica/scaling_4x_vs_1", 0.0,
+                 f"{ratio:.2f}x fleet tok/s at replica=4 vs replica=1 "
+                 f"(acceptance floor 2.5x; fleet clock: a round costs its "
+                 f"slowest replica)",
+                 {"mesh": "replicas=4", "ratio": round(ratio, 3),
+                  "floor": 2.5}))
+
+    # --- dispatch A/B: per-tenant system prompts over prefix-cached
+    # replicas.  3 tenants on 4 replicas breaks the i%4 / i%3 aliasing, so
+    # round robin genuinely smears each tenant across all replicas.
+    scfg_px = ServingConfig(max_batch=2, prompt_bucket=8, paged=True,
+                            block_size=16, prefix_cache=True)
+    tenant_trace = dict(vocab_size=cfg.vocab_size, prompt_lens=[8, 12],
+                        max_new_tokens=4, seed=5, shared_prefix_len=32,
+                        n_tenants=3)
+    hit = {}
+    for pol in ("round_robin", "prefix_affinity"):
+        router, _, res = fleet_run(
+            4, policy=pol, scfg=scfg_px, warm=False,
+            reqs=synthetic_requests(24, start_time=0.0, **tenant_trace))
+        assert len(res) == 24, f"{pol} lost requests"
+        hit[pol] = router.metrics().summary()["prefix_hit_rate"]
+    assert hit["prefix_affinity"] > hit["round_robin"], \
+        "prefix_affinity must beat round_robin on the multi-tenant trace"
+    rows.append(("replica/round_robin_hit_rate", 0.0,
+                 f"{hit['round_robin'] * 100:.0f}% aggregate prefix hit "
+                 f"rate (each tenant cold-misses once per replica)",
+                 {"mesh": "replicas=4"}))
+    rows.append(("replica/affinity_hit_rate", 0.0,
+                 f"{hit['prefix_affinity'] * 100:.0f}% aggregate prefix "
+                 f"hit rate vs round robin "
+                 f"{hit['round_robin'] * 100:.0f}% (3 tenants pinned to "
+                 f"one trie each; floor 0.7)",
+                 {"mesh": "replicas=4",
+                  "ratio": round(hit["prefix_affinity"], 3), "floor": 0.7}))
+
+    # --- kill drill: bit-exact vs a single-scheduler oracle
+    oracle = Scheduler(params, cfg, scfg)
+    oreqs = synthetic_requests(n_req, start_time=oracle.clock(), **trace)
+    for r in oreqs:
+        oracle.submit_request(r)
+    orun = oracle.run()
+    kreqs = synthetic_requests(n_req, start_time=0.0, **trace)
+    router, _, res = fleet_run(
+        2, reqs=kreqs, warm=False,
+        plan=FailurePlan(kill_replica=0, at_step=6))
+    zero_lost = (len(res) == n_req
+                 and set(res) == {r.rid for r in kreqs})
+    exact = zero_lost and all(
+        np.array_equal(res[k.rid], orun[o.rid])
+        for k, o in zip(kreqs, oreqs))
+    s = router.metrics().summary()
+    migrated = s["rebalanced_requests"]
+    assert migrated > 0, "the kill must actually catch in-flight requests"
+    rows.append(("replica/kill_mid_trace_zero_lost", 0.0,
+                 f"replica 0 killed at step 6: {n_req}/{n_req} completed, "
+                 f"{migrated} drained+requeued, "
+                 f"{s['replica_restarts']} respawn, tokens bit-identical "
+                 f"to the single-scheduler oracle",
+                 {"mesh": "replicas=2",
+                  "bit_exact": bool(zero_lost and exact)}))
+    return rows
+
+
 def tp_quant_decode() -> List[Row]:
     """Tensor-parallel quant_tp decode vs single-rank quant, model={1,2,4,8}.
 
@@ -638,9 +808,10 @@ SUITES = {
     "serving": [serving_throughput],
     "serving-paged": [serving_paged],
     "prefix": [serving_prefix],
+    "replica": [serving_replica],
     "tp": [tp_quant_decode],
     "all": TABLES + [serving_throughput, serving_paged, serving_prefix,
-                     tp_quant_decode],
+                     serving_replica, tp_quant_decode],
 }
 
 
@@ -679,13 +850,14 @@ def main(argv=None) -> None:
                          "decode throughput; serving-paged: paged-vs-"
                          "contiguous KV pool A/B + sliding-window serving; "
                          "prefix: trie prefix-cache warm-vs-cold TTFT per "
-                         "PIM mode; tp: tensor-parallel quant_tp vs "
-                         "single-rank quant; all: everything")
+                         "PIM mode; replica: multi-replica router scaling/"
+                         "affinity/kill-drill; tp: tensor-parallel quant_tp "
+                         "vs single-rank quant; all: everything")
     args = ap.parse_args(argv)
 
-    if args.suite in ("tp", "prefix", "all"):
-        # the tp/prefix tables shard over an 8-device mesh: force the
-        # topology before anything initializes jax (no-op if already forced)
+    if args.suite in ("tp", "prefix", "replica", "all"):
+        # these tables shard/slice an 8-device topology: force it before
+        # anything initializes jax (no-op if already forced)
         from repro.xla_flags import ensure_host_device_count
 
         ensure_host_device_count(8)

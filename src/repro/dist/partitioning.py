@@ -28,7 +28,8 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.dist import context as dctx
 
 __all__ = ["param_pspecs", "opt_state_pspecs", "batch_pspecs",
-           "cache_pspecs", "tree_shardings", "tp_shard_dim"]
+           "cache_pspecs", "tree_shardings", "tp_shard_dim",
+           "replica_slices"]
 
 FSDP_AXIS = "data"
 
@@ -168,6 +169,25 @@ def cache_pspecs(caches, mesh, *, batch_over_dp: bool = True):
 
     return jax.tree_util.tree_map_with_path(leaf, caches,
                                             is_leaf=_is_shape_leaf)
+
+
+def replica_slices(n_replicas: int, devices=None):
+    """Disjoint contiguous device slices for a data-parallel replica fleet.
+
+    The serving router gives each replica its own slice (its own mesh, KV
+    pool, prefix trie); contiguity keeps each replica's model-parallel
+    collectives on neighbouring devices, matching how
+    ``ElasticMesh.make`` reshapes a device list.  ``n_replicas`` must
+    divide the device count — a ragged fleet would hand replicas unequal
+    capacity and poison the scaling benchmark.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    if n_replicas < 1 or n % n_replicas:
+        raise ValueError(
+            f"{n_replicas} replicas cannot evenly split {n} devices")
+    per = n // n_replicas
+    return [devices[i * per:(i + 1) * per] for i in range(n_replicas)]
 
 
 def tree_shardings(spec_tree, mesh):

@@ -16,6 +16,23 @@ index with copy-on-write sharing — pair it with ``--shared-prefix N`` to
 give every synthetic prompt one N-token system prompt and watch warm
 admits skip its prefill entirely.
 
+**Multi-replica router** (``--replicas N``): instead of one scheduler,
+``N`` independent engines — each its own device slice, mesh, KV pool,
+and prefix trie — behind one ``serving.Router`` that owns the global
+admission queue (``--queue-policy fifo|sjf``) and dispatches per request
+with ``--router-policy``: ``round_robin``, ``least_loaded`` (fewest
+queued+active, most free KV blocks), or ``prefix_affinity`` (leading
+block-run hash pins repeat/system prefixes to the replica whose trie
+holds them).  ``--kill-replica R:S`` injects a failure — replica ``R``
+dies after router step ``S``, its in-flight requests drain back to the
+front of the global queue (original arrival kept, ``n_migrations``
+bumped) and it respawns over its surviving devices; migrated requests
+restart from their prompt, so greedy outputs are bit-identical to an
+undisturbed run.  Throughput is reported on the fleet clock (a round
+costs its slowest replica — see ``serving.router``); the ``[router]``
+line echoes the policy, per-replica tok/s, rebalanced requests, and
+restarts.
+
 CPU-runnable with ``--smoke``/``--preset``.  On multi-device runs the
 driver enters the ``ElasticMesh`` (same policy as ``launch/train.py``);
 the cache pool keeps its slot dim replicated while attention heads shard
@@ -41,22 +58,42 @@ from repro.launch.train import PRESETS, build_cfg
 from repro.models import model_lib as M
 from repro.pim import engine
 from repro.runtime.fault_tolerance import ElasticMesh
-from repro.serving import Scheduler, ServingConfig, synthetic_requests
+from repro.serving import (FailurePlan, Router, RouterConfig, Scheduler,
+                           ServingConfig, synthetic_requests)
+from repro.serving.router import ROUTER_POLICIES
 
 
 def serve_trace(params, cfg, requests, *, max_batch: int, prompt_bucket: int,
                 mesh=None, paged: bool = False, block_size: int = 16,
-                num_blocks=None, prefix_cache: bool = False):
+                num_blocks=None, prefix_cache: bool = False,
+                queue_policy: str = "fifo"):
     """Run a request trace through the scheduler; returns (results, summary)."""
     scfg = ServingConfig(max_batch=max_batch, prompt_bucket=prompt_bucket,
                          paged=paged, block_size=block_size,
-                         num_blocks=num_blocks, prefix_cache=prefix_cache)
+                         num_blocks=num_blocks, prefix_cache=prefix_cache,
+                         queue_policy=queue_policy)
     sched = Scheduler(params, cfg, scfg, mesh=mesh)
     for req in requests:
         sched.submit_request(req)
     results = sched.run()
     summary = sched.metrics.summary()
     summary["decode_traces"] = sched.decode_traces
+    return results, summary
+
+
+def serve_fleet(params, cfg, requests, *, scfg: ServingConfig,
+                rcfg: RouterConfig, devices=None, failure_plan=None):
+    """Run a trace through the multi-replica router on the fleet clock;
+    returns (results, summary).  Request arrival times must be on the
+    fleet clock (start at 0), not ``time.monotonic``."""
+    router = Router(params, cfg, scfg, rcfg, devices=devices,
+                    failure_plan=failure_plan)
+    for req in requests:
+        router.submit_request(req)
+    results = router.run()
+    summary = router.metrics().summary()
+    summary["decode_traces"] = sum(
+        r.sched.decode_traces for r in router.replicas if r.alive)
     return results, summary
 
 
@@ -103,11 +140,26 @@ def main():
     ap.add_argument("--sequential", action="store_true",
                     help="also run the trace one-request-at-a-time "
                          "(max_batch=1) for an A/B comparison")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving replicas behind the router; each gets "
+                         "its own device slice, mesh, KV pool, and prefix "
+                         "trie (1: single scheduler, no router)")
+    ap.add_argument("--router-policy", choices=list(ROUTER_POLICIES),
+                    default="least_loaded",
+                    help="per-request dispatch policy (--replicas > 1)")
+    ap.add_argument("--queue-policy", choices=["fifo", "sjf"],
+                    default="fifo",
+                    help="admission order, global queue and per-replica "
+                         "backfill alike (sjf: shortest prompt first)")
+    ap.add_argument("--kill-replica", default=None, metavar="R:S",
+                    help="inject a failure: kill replica R after router "
+                         "step S (drain-and-requeue, then respawn)")
     args = ap.parse_args()
 
+    fleet = args.replicas > 1
     mesh = None
     mesh_ctx = contextlib.nullcontext()
-    if jax.device_count() > 1:
+    if jax.device_count() > 1 and not fleet:
         mesh = ElasticMesh(model_parallel=args.model_parallel).make()
         print(f"[mesh] {dict(mesh.shape)} over {mesh.size} devices")
         mesh_ctx = dctx.use_mesh(mesh)
@@ -124,18 +176,39 @@ def main():
     requests = synthetic_requests(
         args.requests, vocab_size=cfg.vocab_size, prompt_lens=plens,
         max_new_tokens=args.gen, rate=args.rate, seed=args.seed,
-        start_time=time.monotonic(), shared_prefix_len=args.shared_prefix)
+        # the router's FleetClock starts at 0; the plain scheduler runs
+        # on time.monotonic
+        start_time=0.0 if fleet else time.monotonic(),
+        shared_prefix_len=args.shared_prefix)
 
     # recurrent blocks fold right-padding into their state: serve those
     # unbucketed (exact; one prefill compile per distinct prompt length)
     bucket = 1 if cfg.has_recurrent_blocks else max(8, args.prompt_len // 4)
 
     with mesh_ctx:
-        results, summary = serve_trace(
-            params, cfg, requests, max_batch=args.batch,
-            prompt_bucket=bucket, mesh=mesh, paged=args.paged,
-            block_size=args.block_size, num_blocks=args.num_blocks,
-            prefix_cache=args.prefix_cache)
+        if fleet:
+            plan = None
+            if args.kill_replica:
+                r, s = args.kill_replica.split(":")
+                plan = FailurePlan(kill_replica=int(r), at_step=int(s))
+            scfg = ServingConfig(
+                max_batch=args.batch, prompt_bucket=bucket,
+                paged=args.paged, block_size=args.block_size,
+                num_blocks=args.num_blocks, prefix_cache=args.prefix_cache,
+                queue_policy=args.queue_policy)
+            rcfg = RouterConfig(n_replicas=args.replicas,
+                                policy=args.router_policy,
+                                model_parallel=args.model_parallel)
+            results, summary = serve_fleet(params, cfg, requests,
+                                           scfg=scfg, rcfg=rcfg,
+                                           failure_plan=plan)
+        else:
+            results, summary = serve_trace(
+                params, cfg, requests, max_batch=args.batch,
+                prompt_bucket=bucket, mesh=mesh, paged=args.paged,
+                block_size=args.block_size, num_blocks=args.num_blocks,
+                prefix_cache=args.prefix_cache,
+                queue_policy=args.queue_policy)
         print(f"served {summary['n_finished']}/{summary['n_requests']} "
               f"requests, {summary['total_tokens']} tokens @ "
               f"{summary['tokens_per_s']:.0f} tok/s "
@@ -161,6 +234,15 @@ def main():
                   f"{summary['mean_ttft_miss_s'] * 1e3:.0f}ms | "
                   f"{summary['peak_blocks_shared']:.0f} blocks shared, "
                   f"{summary['cow_copies']:.0f} COW copies")
+        if fleet:
+            per = ", ".join(f"r{r}: {v:.0f}" for r, v in
+                            sorted(summary["per_replica_tok_s"].items()))
+            print(f"[router] {summary['router_policy']} over "
+                  f"{args.replicas} replicas | per-replica tok/s {{{per}}} "
+                  f"| {summary['rebalanced_requests']} rebalanced, "
+                  f"{summary['replica_restarts']} restarts | "
+                  f"queue {args.queue_policy}, p50 wait "
+                  f"{summary['p50_queue_wait_s'] * 1e3:.0f}ms")
         if args.pim_mode == "pim_sim":
             info = engine.cache_info()
             print(f"[pim] crossbar uploads {info.exec_uploads}, "

@@ -126,3 +126,11 @@ class StragglerMonitor:
         if slow:
             self.flagged += 1
         return slow
+
+    def reset(self) -> None:
+        """Forget history — e.g. after a replica respawn, whose first
+        steps re-pay compilation and must not inherit the dead replica's
+        EWMA baseline."""
+        self._ewma = 0.0
+        self._n = 0
+        self.flagged = 0

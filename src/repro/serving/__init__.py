@@ -1,23 +1,60 @@
-"""repro.serving — continuous-batching decode runtime.
+"""repro.serving — continuous-batching decode runtime + replica fleet.
 
-The serving layer above the model/engine stack: a FIFO admission queue
-(``queue``), a slot-indexed persistent KV-cache pool (``cache``), the
-continuous-batching scheduler whose jitted decode step never recompiles as
-requests churn (``scheduler``), and per-request/aggregate serving metrics
-(``metrics``).  ``launch/serve.py`` is a thin CLI over this package.
+Single engine: a policy admission queue (``queue`` — FIFO or
+shortest-prompt-first), a slot-indexed / block-paged persistent KV-cache
+pool with prefix-trie COW sharing (``cache``), the continuous-batching
+scheduler whose jitted decode step never recompiles as requests churn
+(``scheduler``), and per-request/aggregate serving metrics
+(``metrics``).
+
+Fleet layer (``router``): N independent engines — each its own
+``Scheduler`` over its own device slice, mesh, pool, and prefix trie —
+behind one :class:`Router` that owns the global admission queue and
+dispatches per request:
+
+* ``round_robin`` — cycle over live replicas;
+* ``least_loaded`` — fewest queued+active, ties to most free KV blocks;
+* ``prefix_affinity`` — leading block-run hash pins repeat prefixes
+  (per-tenant system prompts) to the replica whose trie holds them,
+  falling back to least-loaded.
+
+Failure semantics: a replica kill (health-probe strikes from
+``StragglerMonitor`` step times, or an injected :class:`FailurePlan`)
+drains its in-flight requests back to the *front* of the global queue —
+original ``arrival_time`` kept, ``n_migrations`` bumped, partial output
+discarded — and respawns the replica via ``ElasticMesh`` over surviving
+devices.  Migrated requests restart from their prompt, so greedy-decode
+outputs stay bit-identical to an uninterrupted run; a kill costs
+latency, never correctness or a lost request.
+
+Fleet metric names (on ``Router.metrics().summary()``, next to the
+single-engine fields): ``router_policy``, ``per_replica_tok_s``,
+``rebalanced_requests``, ``replica_restarts``; replica wall time is
+modeled by :class:`FleetClock` (a round costs its slowest replica — see
+``router`` module docstring).
+
+``launch/serve.py`` is a thin CLI over this package
+(``--replicas/--router-policy/--kill-replica/--queue-policy``).
 """
 from repro.serving.cache import CachePool, PagedCachePool
 from repro.serving.metrics import RequestMetrics, ServingMetrics
 from repro.serving.queue import (AdmissionQueue, Request, make_request,
                                  synthetic_requests)
+from repro.serving.router import (FailurePlan, FleetClock, Replica, Router,
+                                  RouterConfig)
 from repro.serving.scheduler import Scheduler, ServingConfig
 
 __all__ = [
     "AdmissionQueue",
     "CachePool",
+    "FailurePlan",
+    "FleetClock",
     "PagedCachePool",
+    "Replica",
     "Request",
     "RequestMetrics",
+    "Router",
+    "RouterConfig",
     "Scheduler",
     "ServingConfig",
     "ServingMetrics",

@@ -279,6 +279,12 @@ class CachePool:
         """Contiguous slots always fit (capacity was reserved up front)."""
         return True
 
+    @property
+    def free_blocks(self) -> int:
+        """Free capacity in slot units (the router's least-loaded signal;
+        the contiguous pool's allocation granularity is one slot)."""
+        return self.max_batch - len(self._assigned)
+
     def admit(self, slot: int, request_cache, plen: int, n_tokens: int,
               *, prompt=None, prefix_blocks=None) -> None:
         self.assign(slot, request_cache)
@@ -570,6 +576,14 @@ class PagedCachePool:
     @property
     def blocks_in_use(self) -> int:
         return self.num_blocks - 1 - len(self._free)
+
+    @property
+    def free_blocks(self) -> int:
+        """Blocks on the free list (the router's least-loaded signal;
+        trie-held ref==1 blocks are reclaimable but not counted — they
+        are *cache*, and a router should prefer a replica with genuinely
+        idle capacity over one that must evict its prefix index)."""
+        return len(self._free)
 
     @property
     def has_shared(self) -> bool:

@@ -6,12 +6,22 @@ TPOT (mean gap between subsequent tokens) — plus the aggregate
 tokens/second over the busy window and queue-depth samples taken once per
 scheduler step.  Everything is on the scheduler's injected clock, so tests
 drive these deterministically with a fake clock.
+
+Under the multi-replica router each replica's scheduler keeps its own
+``ServingMetrics``; :meth:`ServingMetrics.merged` folds them (plus the
+metrics stashed from killed replicas) into one fleet view — for a request
+recorded by several replicas (drained, then re-served) the *finished*
+entry wins, so TTFT/queue-wait stay anchored to the original arrival
+while token counts come from the replica that completed it.  The router
+stamps the merged object with ``router_policy`` /
+``rebalanced_requests`` / ``replica_restarts`` / ``per_replica_tok_s``,
+which then appear in :meth:`summary`.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 __all__ = ["RequestMetrics", "ServingMetrics"]
 
@@ -58,6 +68,12 @@ class ServingMetrics:
         self.active_samples: List[int] = []
         self.pool_samples: List[Dict[str, float]] = []
         self.deferred_admits = 0
+        # router-level fields; the router stamps these on the merged
+        # fleet metrics (router_policy None => single-scheduler summary)
+        self.router_policy: Optional[str] = None
+        self.rebalanced_requests = 0
+        self.replica_restarts = 0
+        self.per_replica_tok_s: Dict[int, float] = {}
 
     def on_submit(self, rid: int, now: float) -> None:
         self.requests[rid] = RequestMetrics(rid=rid, arrival_time=now)
@@ -103,10 +119,42 @@ class ServingMetrics:
 
     # ------------------------------------------------------------------
 
+    @classmethod
+    def merged(cls, parts: Sequence["ServingMetrics"]) -> "ServingMetrics":
+        """Fold several per-replica metrics into one fleet view.
+
+        A request drained from a killed replica appears in two parts: an
+        unfinished entry on the dead replica and (eventually) a finished
+        one on its new home.  The finished entry wins; among unfinished
+        duplicates the later-touched one does.  Samples concatenate and
+        ``deferred_admits`` sum — fleet-wide totals, not averages.
+        """
+        out = cls()
+        for m in parts:
+            for rid, r in m.requests.items():
+                cur = out.requests.get(rid)
+                if cur is None or (cur.finish_time is None
+                                   and r.finish_time is not None):
+                    out.requests[rid] = r
+            out.queue_depth_samples.extend(m.queue_depth_samples)
+            out.active_samples.extend(m.active_samples)
+            out.pool_samples.extend(m.pool_samples)
+            out.deferred_admits += m.deferred_admits
+        return out
+
     @staticmethod
     def _mean(xs: List[float]) -> float:
         xs = [x for x in xs if not math.isnan(x)]
         return sum(xs) / len(xs) if xs else math.nan
+
+    @staticmethod
+    def _p50(xs: List[float]) -> float:
+        xs = sorted(x for x in xs if not math.isnan(x))
+        if not xs:
+            return math.nan
+        n = len(xs)
+        mid = n // 2
+        return xs[mid] if n % 2 else 0.5 * (xs[mid - 1] + xs[mid])
 
     def summary(self) -> Dict[str, float]:
         rs = list(self.requests.values())
@@ -133,7 +181,7 @@ class ServingMetrics:
                            for p in self.pool_samples), default=0.0)
         cow = max((p.get("cow_copies", 0.0)
                    for p in self.pool_samples), default=0.0)
-        return {
+        out = {
             "n_requests": len(rs),
             "n_finished": len(done),
             "total_tokens": total_tokens,
@@ -142,6 +190,7 @@ class ServingMetrics:
             "mean_ttft_s": self._mean([r.ttft for r in rs]),
             "mean_tpot_s": self._mean([r.tpot for r in rs]),
             "mean_queue_wait_s": self._mean([r.queue_wait for r in rs]),
+            "p50_queue_wait_s": self._p50([r.queue_wait for r in rs]),
             "max_queue_depth": max(self.queue_depth_samples, default=0),
             "mean_active_slots": self._mean(
                 [float(a) for a in self.active_samples]),
@@ -165,3 +214,11 @@ class ServingMetrics:
             "peak_blocks_shared": peak_shared,
             "cow_copies": cow,
         }
+        if self.router_policy is not None:
+            out.update({
+                "router_policy": self.router_policy,
+                "rebalanced_requests": self.rebalanced_requests,
+                "replica_restarts": self.replica_restarts,
+                "per_replica_tok_s": dict(self.per_replica_tok_s),
+            })
+        return out

@@ -37,7 +37,18 @@ slot about to write into one (``ensure_writable``), so trie hits, forks,
 and windowed ring wraps never corrupt other referents.  Tail prefill
 retraces once per (match length, tail bucket) pair — cheap when prompts
 share a few long system prefixes, which is the workload prefix caching
-is for.  Under ``pim_mode="pim_sim"`` the decode step's
+is for.
+
+The scheduler is **single-replica-ignorant**: it admits in whatever
+order its :class:`AdmissionQueue` policy picks (``queue_policy=`` —
+FIFO or shortest-prompt-first), and the only multi-replica hooks it
+exposes are ``validate_request``/``submit_request`` (router-side global
+admission), ``drain()`` (evict all in-flight work and return the
+unfinished :class:`Request`s for requeue elsewhere) and ``output(rid)``
+(harvest finished tokens).  Everything fleet-shaped — dispatch,
+health, respawn — lives one level up in :mod:`repro.serving.router`.
+
+Under ``pim_mode="pim_sim"`` the decode step's
 crossbar GEMMs
 run through the engine's persistent :class:`ExecutionSession` pool:
 crossbar state is uploaded once per artifact and only operand columns
@@ -85,6 +96,7 @@ class ServingConfig:
     block_size: int = 16        # tokens per KV block (paged pool)
     num_blocks: Optional[int] = None   # physical blocks (None: full parity)
     prefix_cache: bool = False  # trie prefix sharing + COW (implies paged)
+    queue_policy: str = "fifo"  # admission order: "fifo" | "sjf"
 
 
 class Scheduler:
@@ -127,7 +139,7 @@ class Scheduler:
         self.cfg = cfg
         self.scfg = scfg
         self.clock = clock
-        self.queue = AdmissionQueue()
+        self.queue = AdmissionQueue(policy=scfg.queue_policy)
         self.metrics = ServingMetrics()
         # sliding-window slots are rings over their block list — only the
         # paged pool can size prefill capacity min(prompt, window), so
@@ -149,6 +161,7 @@ class Scheduler:
         self._tokens = np.zeros((B, 1), np.int32)
         self._remaining = np.zeros(B, np.int64)
         self._outputs: Dict[int, List[int]] = {}
+        self._active_req: Dict[int, Request] = {}   # rid -> in-slot request
         self._deferred_rid = -1     # dedupe: one deferral count per request
         self.decode_traces = 0      # python-body executions == jit retraces
 
@@ -186,7 +199,9 @@ class Scheduler:
                            else arrival_time)
         return self.submit_request(req)
 
-    def submit_request(self, req: Request) -> int:
+    def validate_request(self, req: Request) -> None:
+        """Raise if ``req`` can never be served by this scheduler's pool
+        (the router runs the same check once, globally, at submit)."""
         plen = req.prompt.shape[0]
         cap = self.pool.max_tokens      # None: windowed ring, unbounded
         if cap is not None and plen + req.max_new_tokens > cap:
@@ -201,6 +216,9 @@ class Scheduler:
                 raise ValueError(
                     f"request {req.rid}: needs {need} KV blocks but the "
                     f"pool holds {self.pool.num_blocks - 1}")
+
+    def submit_request(self, req: Request) -> int:
+        self.validate_request(req)
         self.queue.submit(req)
         self.metrics.on_submit(req.rid, req.arrival_time)
         return req.rid
@@ -229,7 +247,9 @@ class Scheduler:
         return max(tlen, min(b, cap))
 
     def _finish(self, slot: int, now: float) -> None:
-        self.metrics.on_finish(int(self._slot_rid[slot]), now)
+        rid = int(self._slot_rid[slot])
+        self.metrics.on_finish(rid, now)
+        self._active_req.pop(rid, None)
         self._slot_rid[slot] = -1
         self.pool.evict(slot)
 
@@ -251,8 +271,9 @@ class Scheduler:
         free = iter(np.flatnonzero(~self.active_slots))
         slot = next(free, None)
         while slot is not None:
-            head = self.queue.peek()
-            if head is None or head.arrival_time > self.clock():
+            now = self.clock()
+            head = self.queue.peek(now)
+            if head is None or head.arrival_time > now:
                 break
             n_tok = head.prompt.shape[0] + head.max_new_tokens
             if self._prefix_on:
@@ -266,7 +287,8 @@ class Scheduler:
                     self._deferred_rid = head.rid    # ... steps spent waiting
                     self.metrics.on_deferred_admit()
                 break
-            req = self.queue.pop(self.clock())
+            req = self.queue.pop(now)
+            assert req is head, "peek/pop selection must agree"
             self._deferred_rid = -1    # the deferred head (if any) got in;
             #                            the next deferral is a new event
             plen = req.prompt.shape[0]
@@ -306,6 +328,7 @@ class Scheduler:
             else:
                 self.pool.admit(int(slot), cache, plen, n_tok)
             self._slot_rid[slot] = req.rid
+            self._active_req[req.rid] = req
             self._tokens[slot, 0] = first
             self._pos[slot] = plen
             self._remaining[slot] = req.max_new_tokens - 1
@@ -351,6 +374,29 @@ class Scheduler:
         self.metrics.sample_pool(self.pool.stats(), self._tokens_live())
         return emitted
 
+    def output(self, rid: int) -> np.ndarray:
+        """Generated tokens recorded so far for ``rid`` (router harvest)."""
+        return np.asarray(self._outputs[rid], np.int32)
+
+    def drain(self) -> List[Request]:
+        """Evict every in-flight request and empty the queue; returns the
+        unfinished :class:`Request`s (original ``arrival_time`` intact) so
+        a router can requeue them elsewhere.  Partial outputs are
+        discarded — a migrated request restarts from its prompt, and
+        greedy decode makes the rerun bit-identical.
+        """
+        out: List[Request] = []
+        for slot in np.flatnonzero(self.active_slots):
+            rid = int(self._slot_rid[slot])
+            req = self._active_req.pop(rid)
+            self._outputs.pop(rid, None)
+            self._slot_rid[slot] = -1
+            self._remaining[slot] = 0
+            self.pool.evict(int(slot))
+            out.append(req)
+        out.extend(self.queue.clear())
+        return out
+
     def _tokens_live(self) -> float:
         """Positions actually written across active slots (for the
         internal-fragmentation metric; ``_pos`` is the next write index,
@@ -373,7 +419,7 @@ class Scheduler:
                 stalls = 0
                 continue
             # idle: head request hasn't arrived yet on this clock
-            head = self.queue.peek()
+            head = self.queue.peek(self.clock())
             if head is None:
                 continue
             before = self.clock()

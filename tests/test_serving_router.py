@@ -1,0 +1,349 @@
+"""repro.serving.router: the multi-replica fleet layer.
+
+The load-bearing assertions: (1) every dispatch policy produces tokens
+bit-identical to one Scheduler serving the same trace — routing changes
+throughput and placement, never generations; (2) a replica kill
+mid-trace loses nothing — its requests drain to the front of the global
+queue with their original ``arrival_time`` and a bumped ``n_migrations``,
+and the fleet's final outputs still match the single-scheduler oracle;
+(3) the respawn path re-derives the mesh over surviving devices
+(``ElasticMesh`` shrink under serving) and the health probe
+(``StragglerMonitor`` strikes) triggers the same drain/respawn without a
+``FailurePlan``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import model_lib as M
+from repro.serving import (AdmissionQueue, FailurePlan, FleetClock, Router,
+                           RouterConfig, Scheduler, ServingConfig,
+                           make_request, synthetic_requests)
+
+N_REQ = 8
+GEN = 8
+
+
+class FakeClock:
+    """Settable clock: router timing becomes exactly computable."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def cfg(small_model_config):
+    return small_model_config
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _trace(cfg):
+    """The shared fleet trace; same seed => same prompts across calls
+    (fresh Request objects each time — the router mutates replica_id)."""
+    return synthetic_requests(N_REQ, vocab_size=cfg.vocab_size,
+                              prompt_lens=[5, 7], max_new_tokens=GEN,
+                              seed=11)
+
+
+@pytest.fixture(scope="module")
+def oracle(cfg, params):
+    """Single-scheduler generations for _trace, by trace index."""
+    reqs = _trace(cfg)
+    sched = Scheduler(params, cfg, ServingConfig(max_batch=4,
+                                                 prompt_bucket=8))
+    for r in reqs:
+        sched.submit_request(r)
+    out = sched.run()
+    return [out[r.rid] for r in reqs]
+
+
+def _scfg(**kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("prompt_bucket", 8)
+    return ServingConfig(**kw)
+
+
+def _assert_matches_oracle(results, reqs, oracle):
+    assert set(results) == {r.rid for r in reqs}
+    for i, r in enumerate(reqs):
+        assert np.array_equal(results[r.rid], oracle[i]), i
+
+
+# --------------------------------------------------------------------------
+# config + clock + queue plumbing
+# --------------------------------------------------------------------------
+
+def test_router_config_validation():
+    with pytest.raises(ValueError, match="unknown router policy"):
+        RouterConfig(policy="fastest")
+    with pytest.raises(ValueError, match="n_replicas"):
+        RouterConfig(n_replicas=0)
+
+
+def test_fleet_clock_rounds_cost_their_slowest_segment():
+    wall = FakeClock(0.0)
+    fc = FleetClock(wall=wall)
+    assert fc() == 0.0
+    fc.start_segment()
+    wall.t += 2.0
+    assert fc() == pytest.approx(2.0)    # in-segment reads stay ordered
+    dt1 = fc.end_segment()
+    assert dt1 == pytest.approx(2.0)
+    assert fc() == 0.0                   # round not over: back to round start
+    fc.start_segment()
+    wall.t += 5.0
+    dt2 = fc.end_segment()
+    fc.end_round([dt1, dt2])
+    assert fc() == pytest.approx(5.0)    # max, not sum: replicas overlap
+    fc.advance_to(9.0)
+    assert fc() == 9.0
+    fc.advance_to(1.0)
+    assert fc() == 9.0                   # idle jumps never rewind
+
+
+def test_requeue_front_keeps_arrival_and_order():
+    q = AdmissionQueue()
+    r1 = make_request([1, 2, 3], 4, arrival_time=0.5)
+    r2 = make_request([4, 5], 4, arrival_time=0.6)
+    q.submit(r1)
+    q.submit(r2)
+    assert q.pop(now=1.0) is r1
+    r1.n_migrations += 1
+    q.requeue(r1)
+    assert q.peek(now=1.0) is r1         # drained work goes to the front
+    assert r1.arrival_time == 0.5        # arrival is never rewritten
+    assert r1.n_migrations == 1
+
+
+# --------------------------------------------------------------------------
+# dispatch policies
+# --------------------------------------------------------------------------
+
+def test_round_robin_cycles_and_matches_oracle(cfg, params, oracle):
+    reqs = _trace(cfg)
+    router = Router(params, cfg, _scfg(),
+                    RouterConfig(n_replicas=2, policy="round_robin"),
+                    devices=jax.devices()[:2])
+    for r in reqs:
+        router.submit_request(r)
+    results = router.run()
+    assert [r.replica_id for r in reqs] == [i % 2 for i in range(N_REQ)]
+    _assert_matches_oracle(results, reqs, oracle)
+    s = router.metrics().summary()
+    assert s["router_policy"] == "round_robin"
+    assert set(s["per_replica_tok_s"]) == {0, 1}
+    assert s["rebalanced_requests"] == 0 and s["replica_restarts"] == 0
+    assert s["n_finished"] == N_REQ
+
+
+def test_least_loaded_prefers_emptier_replica(cfg, params):
+    router = Router(params, cfg, _scfg(),
+                    RouterConfig(n_replicas=2, policy="least_loaded"),
+                    devices=jax.devices()[:2], clock=FakeClock(1.0))
+    # pre-load replica 0 behind the router's back
+    router.replicas[0].sched.submit([9, 9, 9], 2)
+    a = make_request([1, 2, 3], 2)
+    b = make_request([4, 5, 6], 2)
+    router.submit_request(a)
+    router.submit_request(b)
+    router._dispatch()
+    assert a.replica_id == 1             # 0 queued+active vs replica 0's 1
+    assert b.replica_id == 0             # now tied 1-1; lowest rid wins
+
+
+def test_prefix_affinity_pins_tenants_to_replicas(cfg, params):
+    scfg = _scfg(paged=True, block_size=8)
+    router = Router(params, cfg, scfg,
+                    RouterConfig(n_replicas=2, policy="prefix_affinity"),
+                    devices=jax.devices()[:2], clock=FakeClock(1.0))
+    # two tenants, each with its own 8-token shared system prompt — one
+    # full block_size run, the affinity key
+    reqs = synthetic_requests(6, vocab_size=cfg.vocab_size, prompt_lens=[4],
+                              max_new_tokens=2, seed=5,
+                              shared_prefix_len=8, n_tenants=2)
+    for r in reqs:
+        router.submit_request(r)
+    router._dispatch()
+    by_tenant = {0: {r.replica_id for r in reqs[0::2]},
+                 1: {r.replica_id for r in reqs[1::2]}}
+    assert len(by_tenant[0]) == 1, "tenant 0 smeared across replicas"
+    assert len(by_tenant[1]) == 1, "tenant 1 smeared across replicas"
+    # least-loaded fallback on first sight puts the tenants on different
+    # replicas, and the mapping is remembered
+    assert by_tenant[0] != by_tenant[1]
+    assert len(router._affinity) == 2
+
+
+def test_prefix_affinity_beats_round_robin_hit_rate(cfg, params):
+    """Acceptance: on a multi-tenant shared-system-prompt trace, pinning
+    tenants to replicas keeps each tenant's blocks in one trie — only
+    the first request per tenant misses — while round_robin smears every
+    tenant across both tries and re-misses per (tenant, replica) pair."""
+    scfg = _scfg(paged=True, block_size=8, prefix_cache=True)
+    rates = {}
+    for policy in ("round_robin", "prefix_affinity"):
+        router = Router(params, cfg, scfg,
+                        RouterConfig(n_replicas=2, policy=policy),
+                        devices=jax.devices()[:2], clock=FakeClock(1.0))
+        # 3 tenants over 2 replicas: coprime, so round_robin's i % 2
+        # cursor cannot accidentally reproduce the tenant pinning
+        reqs = synthetic_requests(12, vocab_size=cfg.vocab_size,
+                                  prompt_lens=[4], max_new_tokens=3, seed=9,
+                                  shared_prefix_len=16, n_tenants=3)
+        for r in reqs:
+            router.submit_request(r)
+        results = router.run()
+        assert len(results) == 12
+        rates[policy] = router.metrics().summary()["prefix_hit_rate"]
+    assert rates["prefix_affinity"] > rates["round_robin"], rates
+
+
+# --------------------------------------------------------------------------
+# fault path: kill, drain, requeue, respawn
+# --------------------------------------------------------------------------
+
+def test_kill_mid_trace_is_bit_exact_and_keeps_arrivals(cfg, params, oracle):
+    reqs = _trace(cfg)
+    for i, r in enumerate(reqs):
+        r.arrival_time = 0.1 * i         # distinct, all arrived at t=100
+    arrivals = {r.rid: r.arrival_time for r in reqs}
+    router = Router(params, cfg, _scfg(),
+                    RouterConfig(n_replicas=2, policy="round_robin"),
+                    devices=jax.devices()[:2], clock=FakeClock(100.0),
+                    failure_plan=FailurePlan(kill_replica=0, at_step=3))
+    for r in reqs:
+        router.submit_request(r)
+    results = router.run()
+    _assert_matches_oracle(results, reqs, oracle)
+    assert router.replica_restarts == 1
+    assert router.rebalanced_requests > 0
+    migrated = [r for r in reqs if r.n_migrations > 0]
+    assert len(migrated) == router.rebalanced_requests
+    for r in reqs:                       # drains never launder latency
+        assert r.arrival_time == arrivals[r.rid]
+    m = router.metrics().summary()
+    assert m["n_finished"] == N_REQ
+    assert m["rebalanced_requests"] == router.rebalanced_requests
+
+
+def test_kill_without_respawn_retires_replica(cfg, params, oracle):
+    reqs = _trace(cfg)
+    router = Router(params, cfg, _scfg(),
+                    RouterConfig(n_replicas=2, policy="least_loaded"),
+                    devices=jax.devices()[:2], clock=FakeClock(1.0),
+                    failure_plan=FailurePlan(kill_replica=0, at_step=2,
+                                             respawn=False))
+    for r in reqs:
+        router.submit_request(r)
+    results = router.run()
+    _assert_matches_oracle(results, reqs, oracle)
+    assert not router.replicas[0].alive
+    assert router.replica_restarts == 0
+    assert router.rebalanced_requests > 0
+    # the lone survivor served every migrated request
+    assert {r.replica_id for r in reqs if r.n_migrations > 0} == {1}
+
+
+def test_all_replicas_dead_raises(cfg, params):
+    router = Router(params, cfg, _scfg(),
+                    RouterConfig(n_replicas=1),
+                    devices=jax.devices()[:1], clock=FakeClock(1.0),
+                    failure_plan=FailurePlan(kill_replica=0, at_step=0,
+                                             respawn=False))
+    router.submit([1, 2, 3], 2)
+    with pytest.raises(RuntimeError, match="all replicas dead"):
+        router.run()
+
+
+def test_elastic_mesh_shrinks_on_device_loss(cfg, params, oracle):
+    """Respawn under device loss: the replica's ElasticMesh re-derives
+    over the survivors mid-serve and the trace still completes exactly."""
+    reqs = _trace(cfg)
+    router = Router(params, cfg, _scfg(),
+                    RouterConfig(n_replicas=2, policy="round_robin"),
+                    devices=jax.devices()[:4], clock=FakeClock(1.0),
+                    failure_plan=FailurePlan(kill_replica=0, at_step=2,
+                                             lose_devices=1))
+    assert router.replicas[0].mesh.devices.size == 2
+    for r in reqs:
+        router.submit_request(r)
+    results = router.run()
+    _assert_matches_oracle(results, reqs, oracle)
+    rep = router.replicas[0]
+    assert rep.alive and router.replica_restarts == 1
+    assert rep.mesh.devices.size == 1    # shrank to the surviving device
+    assert len(rep.devices) == 1
+
+
+def test_straggler_strikes_kill_and_respawn(cfg, params, oracle):
+    """Health transition without a FailurePlan: a replica whose step
+    times spike past the EWMA band accumulates consecutive strikes, gets
+    drained + respawned, then serves healthily (monitor reset)."""
+    reqs = _trace(cfg)
+    clk = FakeClock(1.0)
+    router = Router(params, cfg, _scfg(),
+                    RouterConfig(n_replicas=2, policy="round_robin",
+                                 health_check=True, straggler_patience=3,
+                                 straggler_threshold=3.0,
+                                 straggler_alpha=0.1),
+                    devices=jax.devices()[:2], clock=clk)
+    rep = router.replicas[1]
+    orig_step = rep.step
+    # 4 healthy rounds seed the EWMA (the monitor needs >3 samples), then
+    # 3 spiked rounds = 3 consecutive strikes = patience; afterwards the
+    # respawned replica steps instantly again
+    dts = iter([0.01] * 4 + [5.0] * 3)
+    rep.step = lambda: (orig_step(), setattr(
+        clk, "t", clk.t + next(dts, 0.0)))[0]
+    for r in reqs:
+        router.submit_request(r)
+    results = router.run()
+    _assert_matches_oracle(results, reqs, oracle)
+    assert router.replica_restarts == 1
+    assert router.rebalanced_requests > 0
+    assert rep.alive and rep.strikes == 0
+
+
+# --------------------------------------------------------------------------
+# queue policy: sjf vs fifo
+# --------------------------------------------------------------------------
+
+def _bimodal(cfg):
+    """One long job submitted first, then short ones — FIFO's worst case."""
+    rng = np.random.default_rng(7)
+    reqs = [make_request(rng.integers(0, cfg.vocab_size, 16), 12)]
+    reqs += [make_request(rng.integers(0, cfg.vocab_size, 4), 2)
+             for _ in range(4)]
+    return reqs
+
+
+@pytest.mark.parametrize("policy", ["fifo", "sjf"])
+def test_queue_policy_accepted_by_scheduler(cfg, params, policy):
+    sched = Scheduler(params, cfg, _scfg(max_batch=1, queue_policy=policy))
+    assert sched.queue.policy == policy
+
+
+def test_sjf_beats_fifo_p50_queue_wait_on_bimodal_trace(cfg, params):
+    """Satellite acceptance: with a bimodal job mix (one long job ahead
+    of many short ones), shortest-prompt-first admission cuts the median
+    queue wait vs FIFO — the long job no longer convoys the shorts."""
+    p50 = {}
+    for policy in ("fifo", "sjf"):
+        clk = FakeClock(0.0)
+        sched = Scheduler(params, cfg,
+                          _scfg(max_batch=1, queue_policy=policy),
+                          clock=clk)
+        for r in _bimodal(cfg):
+            sched.submit_request(r)
+        while len(sched.queue) or sched.n_active:
+            sched.step()
+            clk.t += 1.0                 # one time unit per step
+        p50[policy] = sched.metrics.summary()["p50_queue_wait_s"]
+    assert p50["sjf"] < p50["fifo"], p50

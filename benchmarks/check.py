@@ -60,6 +60,43 @@ lost/duplicated requests and tokens identical to the single-scheduler
 oracle, so any flip is a drain/requeue correctness regression, never
 noise).
 
+The autotune suite rows gate the partition autotuner's contract:
+``autotune/*_picked_vs_default`` floors at 1.0 — the tuner's pick is the
+argmin of a timed race that always contains the engine's hardcoded
+default, so a value below 1.0 means the default fell out of the race,
+not noise; ``autotune/tuned_bit_exact_vs_default`` and
+``autotune/table_roundtrip`` are ``bit_exact`` booleans (tuned plans
+change speed, never results; persisted picks must survive
+save -> clear_cache -> load); the ``autotune/mult_*_32b_cycles`` ratios
+are deterministic simulator cycle counts of the new multiplier backends
+vs the NOR serial baseline.
+
+**Tuning-table JSON format** (``pim.autotune.save_table`` /
+``load_table``; written by ``serve.py --autotune-table PATH``)::
+
+    {"version": 1,
+     "entries": {
+       "gemm:k<K>b<bits>m<model>x<Mbucket>o<O>@<pim_mode>": {
+         "key": ..., "kind": "gemm" | "linear",
+         "model":  partition model or linear lowering picked,
+         "n_cols": crossbar geometry, "chunk": dot terms per program,
+         "backend": execution backend ("" for non-executable ranks),
+         "predicted_us": cost-model device latency,
+         "trial_us": measured pick, "default_us": measured default,
+         "source": "cost_model" | "trial" | "table"}, ...}}
+
+Keys bucket the batch rows M to the next power of two (decode batch
+churn must not thrash the table); ``linear:`` keys race the quant vs
+quant_tp int8 lowerings.  Loading stamps every entry
+``source="table"``, so the ``[autotune]`` hit counters show warmup
+reusing picks instead of re-searching.  To refresh a persisted table
+after an engine or cost-model change, delete the file (or pass
+``force=True`` to ``pim.autotune.autotune``) and re-run
+``serve.py --autotune --autotune-table PATH`` — trials re-race on the
+current code and the file is rewritten on exit; bumping
+``pim.autotune.TABLE_VERSION`` invalidates stale files loudly
+(``load_table`` raises on mismatch).
+
 A row present in the baseline but missing from the fresh artifact fails:
 renaming or deleting a benchmark must refresh the baseline deliberately,
 never silently drop coverage.  Fresh-only rows (new benchmarks) pass with

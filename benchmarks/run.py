@@ -47,8 +47,13 @@ the fleet clock (replica={1,2,4} throughput scaling over 8-device
 slices, a prefix-affinity vs round-robin dispatch hit-rate A/B on a
 multi-tenant trace, and a mid-trace replica-kill drill that must finish
 with zero lost requests and tokens bit-identical to a single-scheduler
-oracle); ``--suite all`` runs everything.  All rows land in the same
-JSON artifact.
+oracle); ``--suite autotune`` runs the partition autotuner's race per
+(shape, pim_mode) grid point — the tuned pick must never lose to the
+hardcoded default (``picked_vs_default`` gated at floor 1.0), the tuned
+GEMM must stay bit-exact, the tuning-table JSON roundtrip must preserve
+picks, and the two new multiplier backends must keep beating the NOR
+serial baseline's cycle count; ``--suite all`` runs everything.  All
+rows land in the same JSON artifact.
 """
 from __future__ import annotations
 
@@ -800,6 +805,93 @@ def tp_quant_decode() -> List[Row]:
     return rows
 
 
+def autotune_suite() -> List[Row]:
+    """Partition autotuner: tuned pick vs hardcoded default per grid point.
+
+    For every (shape, pim_mode) grid point the tuner races the top
+    cost-model candidates (partition model x crossbar geometry x chunking
+    x state backend) *plus the engine's hardcoded default* in timed
+    trials; the pick is the argmin of that race, so
+    ``picked_vs_default >= 1.0`` holds by construction — the gate floor
+    1.0 therefore polices the tuner's contract ("never slower than not
+    tuning"), and any dip below it means the default stopped being in the
+    race.  ``pim_mode="raw"`` races the direct-call state backends;
+    ``"pim_sim"`` is the jax.pure_callback context, where only the
+    jax-free numpy interpreter may run.  Further rows gate the tuned
+    path's bit-exactness against the default configuration, the
+    tuning-table JSON save/reload roundtrip (format in check.py's
+    header), and the cycle counts of the two new multiplier backends vs
+    the NOR serial baseline (deterministic simulator measurements).
+    """
+    import numpy as np
+
+    from repro.pim import autotune, engine
+
+    engine.clear_cache()
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    # K=24 fits one chunk at every geometry; K=96 chunks 3x at 1024
+    # columns but fits one program at 2048+ — the geometry trade-off the
+    # tuner exists to call
+    grid = [((4, 24, 32), "raw"), ((4, 96, 64), "raw"),
+            ((4, 96, 64), "pim_sim")]
+    for (m, k_dim, o), mode in grid:
+        plan = autotune.autotune(k_dim, 8, (m, o), mode, trials=2)
+        rows.append((f"autotune/k{k_dim}_{mode}_picked_vs_default", 0.0,
+                     f"picked model={plan.model} n_cols={plan.n_cols} "
+                     f"chunk={plan.chunk} backend={plan.backend}: "
+                     f"{plan.trial_us:.0f}us vs default "
+                     f"{plan.default_us:.0f}us = {plan.vs_default:.2f}x "
+                     f"(>= 1.0 by construction)",
+                     {"pim_mode": mode,
+                      "ratio": round(plan.vs_default, 3),
+                      "floor": 1.0, "tol": 0.0}))
+    # tuned path must compute the identical integer GEMM
+    m, k_dim, o = 4, 96, 64
+    plan = autotune.autotune(k_dim, 8, (m, o), "raw", trials=0)
+    x = rng.integers(0, 256, size=(m, k_dim), dtype=np.uint64)
+    w = rng.integers(0, 256, size=(o, k_dim), dtype=np.uint64)
+    same = bool(np.array_equal(engine.matmul_int(x, w, 8),
+                               engine.matmul_int(x, w, 8, plan=plan)))
+    rows.append(("autotune/tuned_bit_exact_vs_default", 0.0,
+                 f"tuned ({plan.model}, n_cols={plan.n_cols}, "
+                 f"chunk={plan.chunk}) == default minimal/1024 GEMM "
+                 f"on {m}x{k_dim}x{o}",
+                 {"bit_exact": same}))
+    # table persistence: picks survive save -> clear -> load
+    import tempfile
+
+    path = os.path.join(tempfile.mkdtemp(), "tuning_table.json")
+    before = {p.key: (p.model, p.n_cols, p.chunk, p.backend)
+              for k, p in [(None, autotune.autotune(k_dim, 8, (m, o), md,
+                                                    trials=0))
+                           for md in ("raw", "pim_sim")]}
+    n_saved = autotune.save_table(path)
+    engine.clear_cache()
+    n_loaded = autotune.load_table(path)
+    autotune.enable(True)
+    survived = all(
+        (p := autotune.lookup(k_dim, 8, shape=(m, o), pim_mode=md))
+        is not None and (p.model, p.n_cols, p.chunk, p.backend)
+        == before[p.key] and p.source == "table"
+        for md in ("raw", "pim_sim"))
+    info = engine.cache_info()
+    rows.append(("autotune/table_roundtrip", 0.0,
+                 f"{n_saved} plan(s) saved, {n_loaded} reloaded, picks "
+                 f"identical after clear_cache ({info.tune_hits} hits / "
+                 f"{info.tune_misses} misses / {info.tune_trials} trials)",
+                 {"bit_exact": bool(survived)}))
+    # the two new multiplier backends vs the NOR serial baseline
+    base = engine.build_multiplier("serial", 32).program.stats().cycles
+    for name in ("serial_fast", "compressor42"):
+        c = engine.build_multiplier(name, 32).program.stats().cycles
+        rows.append((f"autotune/mult_{name}_32b_cycles", 0.0,
+                     f"{c} cycles vs NOR serial {base} "
+                     f"({base / c:.2f}x; deterministic)",
+                     {"ratio": round(base / c, 3), "floor": 1.1}))
+    return rows
+
+
 TABLES = [fig6a_latency, fig6b_control, fig6c_area, energy, bounds,
           sim_throughput, dot_accumulate, engine_compile_cache, pim_lm_gemm]
 
@@ -810,8 +902,9 @@ SUITES = {
     "prefix": [serving_prefix],
     "replica": [serving_replica],
     "tp": [tp_quant_decode],
+    "autotune": [autotune_suite],
     "all": TABLES + [serving_throughput, serving_paged, serving_prefix,
-                     serving_replica, tp_quant_decode],
+                     serving_replica, tp_quant_decode, autotune_suite],
 }
 
 

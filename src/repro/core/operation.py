@@ -62,6 +62,18 @@ class PartitionConfig:
         assert 0 <= partition < self.k and 0 <= intra < self.m
         return partition * self.m + intra
 
+    def scaled(self, *, n: Optional[int] = None,
+               k: Optional[int] = None) -> "PartitionConfig":
+        """A validated copy at a different geometry (autotune candidates).
+
+        Widening ``n`` at fixed ``k`` grows the per-partition column budget
+        ``m`` (more dot terms per row) but also the column-index field in
+        every control message; the trade-off is what ``pim.autotune``
+        searches over.
+        """
+        return PartitionConfig(self.n if n is None else n,
+                               self.k if k is None else k)
+
 
 @dataclasses.dataclass(frozen=True)
 class GateOp:

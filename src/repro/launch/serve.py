@@ -43,12 +43,20 @@ config (e.g. ``pim_sim`` decodes on the bit-accurate crossbar simulator,
 whose persistent ``ExecutionSession`` uploads crossbar state once per
 artifact and streams only operand columns per token; ``quant_tp`` decodes
 on per-rank int8 Pallas tiles shard_mapped over the mesh "model" axis —
-pair it with ``--model-parallel``).
+pair it with ``--model-parallel``).  ``--autotune`` switches the
+``repro.pim.autotune`` planner on: under ``pim_sim`` the scheduler's
+warmup plans every linear shape at the decode batch bucket (partition
+model x crossbar geometry x chunking x backend, cost-model-scored, timed
+tie-break) and decode runs the picks; ``--autotune-table PATH`` persists
+the picks as JSON (format documented in ``benchmarks/check.py``) so the
+next run reloads them instead of re-searching.  The ``[autotune]`` line
+echoes table size, hit/miss/trial counters, and an example pick.
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
+import os
 import time
 
 import jax
@@ -56,7 +64,7 @@ import jax
 from repro.dist import context as dctx
 from repro.launch.train import PRESETS, build_cfg
 from repro.models import model_lib as M
-from repro.pim import engine
+from repro.pim import autotune, engine
 from repro.runtime.fault_tolerance import ElasticMesh
 from repro.serving import (FailurePlan, Router, RouterConfig, Scheduler,
                            ServingConfig, synthetic_requests)
@@ -66,12 +74,14 @@ from repro.serving.router import ROUTER_POLICIES
 def serve_trace(params, cfg, requests, *, max_batch: int, prompt_bucket: int,
                 mesh=None, paged: bool = False, block_size: int = 16,
                 num_blocks=None, prefix_cache: bool = False,
-                queue_policy: str = "fifo"):
+                queue_policy: str = "fifo", autotune: bool = False,
+                autotune_trials: int = 1):
     """Run a request trace through the scheduler; returns (results, summary)."""
     scfg = ServingConfig(max_batch=max_batch, prompt_bucket=prompt_bucket,
                          paged=paged, block_size=block_size,
                          num_blocks=num_blocks, prefix_cache=prefix_cache,
-                         queue_policy=queue_policy)
+                         queue_policy=queue_policy, autotune=autotune,
+                         autotune_trials=autotune_trials)
     sched = Scheduler(params, cfg, scfg, mesh=mesh)
     for req in requests:
         sched.submit_request(req)
@@ -118,6 +128,18 @@ def main():
                     help="linear lowering; quant_tp shards per-rank int8 "
                          "Pallas tiles over the mesh 'model' axis "
                          "(set --model-parallel > 1)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="plan crossbar GEMM configurations at warmup "
+                         "(pim_sim: every linear shape at the decode batch "
+                         "bucket; quant/quant_tp: race the two int8 "
+                         "lowerings) and decode with the tuned picks")
+    ap.add_argument("--autotune-table", default=None, metavar="PATH",
+                    help="tuning-table JSON (format: benchmarks/check.py "
+                         "header): loaded before warmup if it exists — "
+                         "warmup then hits instead of re-searching — and "
+                         "written back after the run")
+    ap.add_argument("--autotune-trials", type=int, default=1,
+                    help="timed trials per raced candidate during warmup")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--paged", action="store_true",
                     help="block-paged KV pool (admits reserve blocks from "
@@ -167,6 +189,13 @@ def main():
     cfg = build_cfg(args)
     if args.pim_mode:
         cfg = cfg.scaled(pim_mode=args.pim_mode)
+    # reload persisted tuner picks before any scheduler warms up: warmup
+    # then *hits* the table (counted in [autotune]) instead of re-searching
+    if args.autotune_table and os.path.exists(args.autotune_table):
+        n = autotune.load_table(args.autotune_table)
+        print(f"[autotune] loaded {n} plan(s) from {args.autotune_table}")
+    if args.autotune:
+        autotune.enable(True)
     # right-size the cache pool: capacity = longest prompt + budget (decode
     # attention cost scales with pool capacity, not with tokens generated)
     cfg = cfg.scaled(max_seq_len=args.shared_prefix + args.prompt_len
@@ -195,7 +224,8 @@ def main():
                 max_batch=args.batch, prompt_bucket=bucket,
                 paged=args.paged, block_size=args.block_size,
                 num_blocks=args.num_blocks, prefix_cache=args.prefix_cache,
-                queue_policy=args.queue_policy)
+                queue_policy=args.queue_policy, autotune=args.autotune,
+                autotune_trials=args.autotune_trials)
             rcfg = RouterConfig(n_replicas=args.replicas,
                                 policy=args.router_policy,
                                 model_parallel=args.model_parallel)
@@ -208,7 +238,8 @@ def main():
                 prompt_bucket=bucket, mesh=mesh, paged=args.paged,
                 block_size=args.block_size, num_blocks=args.num_blocks,
                 prefix_cache=args.prefix_cache,
-                queue_policy=args.queue_policy)
+                queue_policy=args.queue_policy, autotune=args.autotune,
+                autotune_trials=args.autotune_trials)
         print(f"served {summary['n_finished']}/{summary['n_requests']} "
               f"requests, {summary['total_tokens']} tokens @ "
               f"{summary['tokens_per_s']:.0f} tok/s "
@@ -247,6 +278,16 @@ def main():
             info = engine.cache_info()
             print(f"[pim] crossbar uploads {info.exec_uploads}, "
                   f"weight-stationary session hits {info.exec_hits}")
+        if args.autotune and args.pim_mode in ("quant", "quant_tp"):
+            # the crossbar tuner has nothing to plan here; race the two
+            # int8 linear lowerings instead (PR 5's bit-exact pair)
+            autotune.autotune_linear(args.batch, cfg.d_model, cfg.d_model,
+                                     trials=args.autotune_trials)
+        if args.autotune or args.autotune_table:
+            print(f"[autotune] {autotune.summary()}")
+        if args.autotune_table:
+            n = autotune.save_table(args.autotune_table)
+            print(f"[autotune] saved {n} plan(s) to {args.autotune_table}")
         if args.pim_mode == "quant_tp" and mesh is not None:
             from repro.kernels.quant_matmul.tp import tile_summary
 

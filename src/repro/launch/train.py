@@ -90,6 +90,11 @@ def main():
                          "(threaded through ModelConfig.pim_mode); quant_tp "
                          "shards int8 tiles over the 'model' axis and "
                          "trains via its straight-through custom_vjp")
+    ap.add_argument("--autotune", action="store_true",
+                    help="before training, print the partition autotuner's "
+                         "cost-model report for every linear shape in the "
+                         "model (picked configuration vs the engine "
+                         "default; no timed trials)")
     args = ap.parse_args()
 
     # Single-device runs skip mesh machinery entirely; multi-device runs get
@@ -104,6 +109,28 @@ def main():
     cfg = build_cfg(args)
     if args.pim_mode:
         cfg = cfg.scaled(pim_mode=args.pim_mode)
+    if args.autotune:
+        # cost-model report: for every distinct linear shape in the model,
+        # what configuration would the partition autotuner pick, and what
+        # does the cost model predict it buys over the engine default?
+        # Pure prediction (trials=0) — nothing here touches the simulator.
+        from repro.pim import autotune
+
+        mode = cfg.pim_mode or "raw"
+        tokens = args.batch * args.seq
+        shapes = sorted({tuple(map(int, s.shape)) for s in
+                         jax.tree_util.tree_leaves(
+                             as_shapes(M.param_specs(cfg)))
+                         if len(s.shape) == 2})
+        print(f"[autotune] cost-model report, {len(shapes)} linear "
+              f"shape(s) at {tokens} tokens ({mode}):")
+        for k_dim, o in shapes:
+            plan = autotune.autotune(k_dim, 8, (tokens, o), mode, trials=0)
+            dflt = autotune.default_plan(k_dim, 8, (tokens, o), mode)
+            gain = dflt.predicted_us / max(plan.predicted_us, 1e-9)
+            print(f"[autotune]   K={k_dim:5d} O={o:5d} -> "
+                  f"model={plan.model} n_cols={plan.n_cols} "
+                  f"chunk={plan.chunk} ({gain:.2f}x vs default predicted)")
     ocfg = AdamWConfig(lr_peak=args.lr, warmup_steps=max(args.steps // 20, 5),
                        total_steps=args.steps)
     data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)

@@ -11,6 +11,14 @@ reports what executing it on a PartitionPIM memristive accelerator would
 cost under each partition design, including the controller->crossbar
 traffic that the paper's control designs reduce by 607/79/36 bits per cycle.
 
+``pim.autotune`` uses this model as its planner: :func:`gemm_cost` accepts
+a crossbar geometry (``n_cols``) and a chunking (``chunk``) so candidate
+configurations — partition model x geometry x inner-dimension split — are
+priced consistently, and :func:`mult_cost` prices any ``kind="mult"``
+algorithm in the engine registry (the NOR serial baseline plus the
+``serial_fast`` / ``compressor42`` backends), so new multiplier algorithms
+join the race by registering, not by editing this file.
+
 Device assumptions (documented, configurable):
 * crossbar: 1024 x 1024, k=32 partitions (paper's evaluation point);
 * cycle time 10 ns (memristor SET/RESET limited);
@@ -21,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.core.control import message_bits
 from repro.core.operation import PartitionConfig
@@ -42,13 +50,31 @@ class PimDeviceParams:
     crossbars: int = 65536  # one "PIM chip" = 64Gb of memristors
 
 
+def _mult_backend(model: str) -> Optional[str]:
+    """Registry name if ``model`` is a serial multiplier algorithm."""
+    from repro.pim import engine
+
+    name = "serial" if model == "baseline" else model
+    try:
+        kind = engine.backend_kind(name)
+    except ValueError:
+        return None
+    return name if kind == "mult" else None
+
+
 @functools.lru_cache(maxsize=None)
 def mult_cost(n_bits: int, model: str, n_cols: int = 1024) -> Dict[str, int]:
-    """Measured per-row multiplication cost from the built programs."""
-    if model == "baseline":
-        from repro.pim.mult_serial import build_serial_multiplier
+    """Measured per-row multiplication cost from the built programs.
 
-        prog = build_serial_multiplier(n_bits, n_cols).program
+    ``model`` is a partition design (``unlimited``/``standard``/``minimal``)
+    or a serial multiplier algorithm from the engine's ``kind="mult"``
+    registry (``baseline`` aliases ``serial``).
+    """
+    mult = _mult_backend(model)
+    if mult is not None:
+        from repro.pim import engine
+
+        prog = engine.build_multiplier(mult, n_bits, n_cols=n_cols).program
     else:
         from repro.pim.multpim import build_multpim
 
@@ -60,32 +86,41 @@ def mult_cost(n_bits: int, model: str, n_cols: int = 1024) -> Dict[str, int]:
 
 
 @functools.lru_cache(maxsize=None)
-def _dot_extra_cost(n_bits: int, model: str) -> Dict[str, int]:
-    """Per-term cost (copies + multiply + accumulate) of the dot mapping.
+def _dot_extra_cost(n_bits: int, model: str, n_cols: int = 1024
+                    ) -> Dict[str, int]:
+    """Per-term cost (copies + multiply + accumulate) of the dot mapping,
+    plus the per-program fixed cost (setup + final carry resolution).
 
-    Partition models: measured from ``build_dot`` (carry-save accumulate).
-    Baseline: the serial multiplier plus a serial ripple accumulate and
-    per-bit operand copies (a crossbar without partitions executes one gate
-    per cycle; there is nothing to fuse)."""
-    if model == "baseline":
-        mc = mult_cost(n_bits, "baseline")
+    Partition models: measured from ``build_dot`` (carry-save accumulate) —
+    per-term is the 1->2-term cycle delta, fixed is what a 1-term program
+    costs beyond one term.  Serial algorithms: the multiplier program plus
+    a serial ripple accumulate and per-bit operand copies (a crossbar
+    without partitions executes one gate per cycle; there is nothing to
+    fuse); the ripple constant matches the algorithm's adder family
+    (9-gate NOR vs 7-gate NAND/OR/AND)."""
+    if _mult_backend(model) is not None:
+        mc = mult_cost(n_bits, model, n_cols)
         n = n_bits
-        ripple = (2 * n + 2) * 13      # FA chain incl. per-position inits
-        copies = 4 * n + 2             # double-NOT per input bit + inits
+        per_pos = 10 if model in ("serial_fast", "compressor42") else 13
+        ripple = (2 * n + 2) * per_pos  # FA chain incl. per-position inits
+        copies = 4 * n + 2              # double-NOT per input bit + inits
         return dict(cycles=mc["cycles"] + ripple + copies,
-                    gates=mc["gates"] + (2 * n + 2) * 10 + 4 * n)
+                    gates=mc["gates"] + (2 * n + 2) * 10 + 4 * n,
+                    fixed_cycles=0)
     from repro.pim.matmul import build_dot
 
     def build(n):
         try:
-            return build_dot(n, n_bits, model=model)
+            return build_dot(n, n_bits, n_cols=n_cols, model=model)
         except ValueError:  # wide operands need a wider crossbar (m = n/k)
-            return build_dot(n, n_bits, n_cols=4096, model=model)
+            return build_dot(n, n_bits, n_cols=max(n_cols, 4096), model=model)
 
     one = build(1).program.stats()
     two = build(2).program.stats()
-    return dict(cycles=two.cycles - one.cycles,
-                gates=two.energy_gates - one.energy_gates)
+    per = two.cycles - one.cycles
+    return dict(cycles=per,
+                gates=two.energy_gates - one.energy_gates,
+                fixed_cycles=max(0, one.cycles - per))
 
 
 @dataclasses.dataclass
@@ -102,6 +137,8 @@ class GemmCost:
     energy_j: float
     control_bits: int       # controller->crossbar traffic for the whole GEMM
     tpu_time_s: float       # bf16 MXU reference point
+    n_cols: int = 1024      # crossbar geometry priced
+    chunks: int = 1         # inner-dimension splits (host-summed partials)
 
     @property
     def flops(self) -> float:
@@ -110,15 +147,31 @@ class GemmCost:
 
 def gemm_cost(m: int, k_dim: int, n: int, n_bits: int = 8,
               model: str = "minimal",
-              dev: PimDeviceParams = PimDeviceParams()) -> GemmCost:
-    """Cost of ``(m x k_dim) @ (k_dim x n)`` on a PartitionPIM accelerator."""
-    per_term = _dot_extra_cost(n_bits, model)
+              dev: PimDeviceParams = PimDeviceParams(),
+              n_cols: Optional[int] = None,
+              chunk: Optional[int] = None) -> GemmCost:
+    """Cost of ``(m x k_dim) @ (k_dim x n)`` on a PartitionPIM accelerator.
+
+    ``n_cols`` overrides the device's crossbar width (a wider row fits more
+    dot terms but pays more control bits per message); ``chunk`` prices the
+    engine's inner-dimension split — each of the ``ceil(k_dim / chunk)``
+    chunked programs pays the fixed setup + final carry-resolution cost.
+    Left as ``None``, both collapse to the classic single-program pricing
+    at the device geometry.
+    """
+    geom = dev.n_cols if n_cols is None else n_cols
+    per_term = _dot_extra_cost(n_bits, model, geom)
     rows_needed = m * n
     rows_per_cb = dev.n_rows
     cbs_needed = -(-rows_needed // rows_per_cb)
     waves = -(-cbs_needed // dev.crossbars)
     busy = min(cbs_needed, dev.crossbars)
     cycles = k_dim * per_term["cycles"]
+    n_chunks = 1
+    if chunk is not None and 0 < chunk < k_dim:
+        n_chunks = -(-k_dim // chunk)
+    if chunk is not None:
+        cycles += n_chunks * per_term["fixed_cycles"]
     time_s = waves * cycles * dev.cycle_ns * 1e-9
     # energy: gates per row x rows actually computing
     gates = k_dim * per_term["gates"] * rows_needed
@@ -126,10 +179,10 @@ def gemm_cost(m: int, k_dim: int, n: int, n_bits: int = 8,
     # control: one message per cycle per (independently-programmed) crossbar
     # column group — crossbars executing the same program share a broadcast
     # message, so traffic is cycles x message_bits per wave.
-    bits = waves * cycles * mult_cost(n_bits, model)["msg_bits"]
+    bits = waves * cycles * mult_cost(n_bits, model, geom)["msg_bits"]
     tpu_time = max(2.0 * m * k_dim * n / TPU_PEAK_FLOPS,
                    (m * k_dim + k_dim * n + m * n) * 2 / TPU_HBM_BW)
     return GemmCost(model=model, n_bits=n_bits, m=m, k_dim=k_dim, n=n,
                     crossbars=busy, waves=waves, cycles_per_wave=cycles,
                     time_s=time_s, energy_j=energy_j, control_bits=bits,
-                    tpu_time_s=tpu_time)
+                    tpu_time_s=tpu_time, n_cols=geom, chunks=n_chunks)

@@ -20,18 +20,26 @@ control, execution).  This module is the driving side, as one API:
 
   Registered backends (one registry = one dispatch point; "state" backends
   map ``(crossbar_state, microcode) -> state``, "linear" backends map
-  ``(x, w) -> y`` and are dispatched by ``models.layers.linear``):
+  ``(x, w) -> y`` and are dispatched by ``models.layers.linear``, "mult"
+  backends map ``(n_bits, n_cols) -> multiplier build`` and are raced by
+  ``pim.autotune`` / priced by ``pim.cost_model``):
 
-  ==========  ======  ==========  =========  ==============================
-  backend     kind    jit         shard_map  grad
-  ==========  ======  ==========  =========  ==============================
-  scan/jnp    state   yes         yes        no (integer state)
-  unrolled    state   traced-only yes        no (integer state)
-  pallas      state   yes         yes        no (integer state)
-  numpy       state   host-only   n/a        no (the ``pure_callback``
-                                             route; see ``sim_linear``)
-  quant_tp    linear  yes         IS one     straight-through custom_vjp
-  ==========  ======  ==========  =========  ==============================
+  ============  ======  ==========  =========  ============================
+  backend       kind    jit         shard_map  grad
+  ============  ======  ==========  =========  ============================
+  scan/jnp      state   yes         yes        no (integer state)
+  unrolled      state   traced-only yes        no (integer state)
+  pallas        state   yes         yes        no (integer state)
+  numpy         state   host-only   n/a        no (the ``pure_callback``
+                                               route; see ``sim_linear``)
+  quant_tp      linear  yes         IS one     straight-through custom_vjp
+  serial        mult    n/a (build  n/a        n/a (gate program; executes
+                        -time only)            on any state backend)
+  serial_fast   mult    n/a         n/a        n/a (7-gate NAND/OR/AND FA,
+                                               arXiv 2410.09953)
+  compressor42  mult    n/a         n/a        n/a (4:2 two-rows-per-pass
+                                               reducer, arXiv 2407.09980)
+  ============  ======  ==========  =========  ============================
 
   (The "quant" and "pim_sim" *modes* lower through
   ``kernels.quant_matmul.quant_linear`` — jit yes, shard_map yes,
@@ -92,6 +100,7 @@ __all__ = [
     "get_backend",
     "backend_kind",
     "backends",
+    "build_multiplier",
     "execute",
     "execute_state",
     "ExecutionSession",
@@ -172,6 +181,10 @@ class CompiledPim:
     x_cols: Tuple[Tuple[int, ...], ...]
     w_cols: Tuple[Tuple[int, ...], ...]
     acc_cols: Tuple[int, ...]
+    # winning autotune.TunedPlan, attached (object.__setattr__) by the tuner
+    # when this artifact is the picked configuration for its compile key;
+    # None until tuned.  Not part of the cache key.
+    plan: Optional["object"] = None
 
     @property
     def n_cols(self) -> int:
@@ -189,6 +202,12 @@ class CacheInfo:
     # the weights were already resident) vs paid a cold full-state upload.
     exec_hits: int = 0
     exec_uploads: int = 0
+    # autotuner counters (pim.autotune): table lookups served from a cached
+    # pick vs searches run, and how many timed candidate trials those
+    # searches spent.
+    tune_hits: int = 0
+    tune_misses: int = 0
+    tune_trials: int = 0
 
 
 _cache: Dict[Tuple, CompiledPim] = {}
@@ -255,22 +274,32 @@ def compile_matmul(n_terms: int, n_bits: int = 8, *, model: str = "minimal",
 
 
 def cache_info() -> CacheInfo:
+    from repro.pim import autotune
+
     with _cache_lock:
         info = CacheInfo(hits=_hits, misses=_misses, builds=_builds,
                          size=len(_cache))
     with _session_lock:
-        return dataclasses.replace(info, exec_hits=_exec_hits,
+        info = dataclasses.replace(info, exec_hits=_exec_hits,
                                    exec_uploads=_exec_uploads)
+    t = autotune.table_info()
+    return dataclasses.replace(info, tune_hits=t.hits, tune_misses=t.misses,
+                               tune_trials=t.trials)
 
 
 def clear_cache() -> None:
     global _hits, _misses, _builds, _exec_hits, _exec_uploads
+    from repro.pim import autotune
+
     with _cache_lock:
         _cache.clear()
         _hits = _misses = _builds = 0
     with _session_lock:
         _sessions.clear()
         _exec_hits = _exec_uploads = 0
+    # picks must not leak across benchmark runs: the tuner table (and its
+    # counters) clears with the compile cache it indexes into
+    autotune.clear()
 
 
 # ==========================================================================
@@ -280,11 +309,15 @@ def clear_cache() -> None:
 # A "state" backend maps (state, microcode, **kw) -> new state, where state
 # is the bit-packed (C, n, W) uint32 crossbar tensor and microcode the
 # (G, 4) rows; a "linear" backend maps (x, w, **kw) -> y over float
-# operands and is dispatched by models.layers.linear (see the registry
-# table in the module docstring).  One registry, tagged kinds: picking a
-# name of the wrong kind at a dispatch point is a clear error, not a shape
-# explosion deep in a kernel.
+# operands and is dispatched by models.layers.linear; a "mult" backend maps
+# (n_bits, n_cols, **kw) -> a built multiplier (program + I/O columns) and
+# is dispatched by build_multiplier for cost_model pricing and autotune
+# races (see the registry table in the module docstring).  One registry,
+# tagged kinds: picking a name of the wrong kind at a dispatch point is a
+# clear error, not a shape explosion deep in a kernel.
 Backend = Callable[..., "object"]
+
+BACKEND_KINDS = ("state", "linear", "mult")
 
 _backends: Dict[str, Backend] = {}
 _backend_kinds: Dict[str, str] = {}
@@ -292,8 +325,8 @@ _backends_lock = threading.Lock()
 
 
 def register_backend(name: str, fn: Backend, *, kind: str = "state") -> None:
-    if kind not in ("state", "linear"):
-        raise ValueError(f"backend kind must be 'state' or 'linear', "
+    if kind not in BACKEND_KINDS:
+        raise ValueError(f"backend kind must be one of {BACKEND_KINDS}, "
                          f"got {kind!r}")
     with _backends_lock:
         _backends[name] = fn
@@ -333,13 +366,22 @@ def _ensure_default_backends() -> None:
 
         return tp_quant_linear(x, w, **kw)
 
+    from repro.pim.compressor42 import build_compressor42_multiplier
+    from repro.pim.mult_serial import build_serial_multiplier
+    from repro.pim.mult_serial_fast import build_fast_serial_multiplier
+
     with _backends_lock:
         for nm, fn, kind in (("scan", scan, "state"),
                              ("jnp", scan, "state"),  # historical alias
                              ("unrolled", unrolled, "state"),
                              ("pallas", pallas, "state"),
                              ("numpy", _numpy_interpret, "state"),
-                             ("quant_tp", quant_tp, "linear")):
+                             ("quant_tp", quant_tp, "linear"),
+                             ("serial", build_serial_multiplier, "mult"),
+                             ("serial_fast", build_fast_serial_multiplier,
+                              "mult"),
+                             ("compressor42", build_compressor42_multiplier,
+                              "mult")):
             _backends.setdefault(nm, fn)
             _backend_kinds.setdefault(nm, kind)
         # only after everything registered: a failed import above leaves the
@@ -394,7 +436,8 @@ def backends() -> Tuple[str, ...]:
 
 
 def backend_kind(name: str) -> str:
-    """``"state"`` or ``"linear"`` (see the registry comment above)."""
+    """``"state"``, ``"linear"`` or ``"mult"`` (see the registry
+    comment above)."""
     _ensure_default_backends()
     with _backends_lock:
         if name not in _backends:
@@ -405,11 +448,29 @@ def backend_kind(name: str) -> str:
 
 def execute_state(state, microcode, *, backend: str = "scan", **kw):
     """Run flat microcode over raw crossbar state on the chosen backend."""
-    if backend_kind(backend) != "state":
+    kind = backend_kind(backend)
+    if kind != "state":
+        what = ("a linear lowering" if kind == "linear"
+                else "a multiplier algorithm")
         raise ValueError(
-            f"backend {backend!r} is a linear lowering ((x, w) -> y), not a "
-            f"crossbar-state executor; it cannot run microcode")
+            f"backend {backend!r} is {what}, not a crossbar-state "
+            f"executor; it cannot run microcode")
     return get_backend(backend)(state, microcode, **kw)
+
+
+def build_multiplier(name: str, n_bits: int, *, n_cols: int = 1024, **kw):
+    """Build (uncached) a registered multiplier algorithm by name.
+
+    Dispatches ``kind="mult"`` registry entries — the algorithms the
+    autotuner races and ``cost_model.mult_cost`` prices.  Guarded like
+    :func:`execute_state`: a state/linear backend name is a clear error.
+    """
+    kind = backend_kind(name)
+    if kind != "mult":
+        raise ValueError(
+            f"backend {name!r} is a {kind!r} backend, not a multiplier "
+            f"algorithm; it cannot build a gate program")
+    return get_backend(name)(n_bits, n_cols, **kw)
 
 
 # ==========================================================================
@@ -603,8 +664,9 @@ def execute(artifact: CompiledPim, x: np.ndarray, w: np.ndarray, *,
 
 def matmul_int(x: np.ndarray, w: np.ndarray, n_bits: int = 8, *,
                model: str = "minimal", rows_per_crossbar: int = 256,
-               backend: str = "scan", accumulate: str = "carry_save"
-               ) -> np.ndarray:
+               backend: str = "scan", accumulate: str = "carry_save",
+               plan: Optional["object"] = None,
+               tune_ctx: Optional[str] = None) -> np.ndarray:
     """Compile-and-execute convenience: bit-exact integer GEMM.
 
     The compile step is cached — calling twice with the same (K, n_bits,
@@ -615,17 +677,35 @@ def matmul_int(x: np.ndarray, w: np.ndarray, n_bits: int = 8, *,
     column budget are split into chunked GEMMs (at most two distinct chunk
     sizes, both cached) whose uint64 partials are summed exactly on the
     host — so any K works, not just what fits one row.
+
+    ``plan`` (an ``autotune.TunedPlan``) overrides model / crossbar
+    geometry / chunking / execution backend with a tuned pick; passing
+    ``tune_ctx`` (a pim-mode string, e.g. ``"pim_sim"``) instead looks the
+    plan up in the autotuner table when tuning is enabled — a miss falls
+    back to the defaults above, it never triggers a search.  Every tuned
+    configuration computes the same exact integer GEMM, so plans change
+    speed, never results.
     """
     from repro.pim.matmul import max_dot_terms
 
     K = x.shape[1]
-    chunk = max_dot_terms(n_bits)
+    if plan is None and tune_ctx is not None:
+        from repro.pim import autotune
+
+        plan = autotune.lookup(K, n_bits, shape=(x.shape[0], w.shape[0]),
+                               pim_mode=tune_ctx, model=model)
+    n_cols = 1024
+    if plan is not None:
+        model, n_cols, backend = plan.model, plan.n_cols, plan.backend
+    chunk = max_dot_terms(n_bits, n_cols)
     if chunk <= 0:
         raise ValueError(f"n_bits={n_bits} does not fit the crossbar layout")
+    if plan is not None and 0 < plan.chunk <= chunk:
+        chunk = plan.chunk
 
     def run(xs, ws):
         artifact = compile_matmul(xs.shape[1], n_bits, model=model,
-                                  accumulate=accumulate)
+                                  accumulate=accumulate, n_cols=n_cols)
         return session_for(artifact, backend=backend,
                            rows_per_crossbar=rows_per_crossbar
                            ).execute(xs, ws)
@@ -661,9 +741,12 @@ def _sim_mm(bits: int, model: str, backend: str, x, w):
         wq = np.clip(np.round(wf / wsc), -qmax, qmax).astype(np.int64)
         # crossbars store magnitudes; signs handled by 2's-complement
         # offset: shift into unsigned, multiply, correct ((a+off)(b+off))
+        # tune_ctx="pim_sim": pick up any tuned plan for this (K, n_bits)
+        # — a no-op unless autotune is enabled and the table has a pick
         acc = matmul_int((xq + off).astype(np.uint64),
                          (wq.T + off).astype(np.uint64),
-                         n_bits=bits + 1, model=model, backend=backend)
+                         n_bits=bits + 1, model=model, backend=backend,
+                         tune_ctx="pim_sim")
         acc = acc.astype(np.int64)
         corr = (off * (wq.sum(axis=0, keepdims=True) + off * xq.shape[1])
                 + off * xq.sum(axis=1, keepdims=True))

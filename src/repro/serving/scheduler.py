@@ -86,6 +86,14 @@ class ServingConfig:
     defer when it runs short.  Sliding-window configs require paging (a
     windowed slot is a ring over its block list) and enable it
     automatically.
+
+    ``autotune=True`` runs the partition autotuner at construction when the
+    model decodes on the crossbar simulator (``cfg.pim_mode == "pim_sim"``):
+    every distinct linear shape in the parameter tree is planned at the
+    decode batch bucket (``pim.autotune.plan_for_params``) and ambient plan
+    lookup is switched on, so the decode loop's GEMMs run the tuned
+    configuration.  Shapes already in the tuner table (e.g. reloaded via
+    ``serve.py --autotune-table``) are warmup hits — no re-search.
     """
 
     max_batch: int = 4          # decode slots
@@ -97,6 +105,8 @@ class ServingConfig:
     num_blocks: Optional[int] = None   # physical blocks (None: full parity)
     prefix_cache: bool = False  # trie prefix sharing + COW (implies paged)
     queue_policy: str = "fifo"  # admission order: "fifo" | "sjf"
+    autotune: bool = False      # plan crossbar GEMMs at warmup (pim_sim)
+    autotune_trials: int = 1    # timed trials per candidate during warmup
 
 
 class Scheduler:
@@ -141,6 +151,17 @@ class Scheduler:
         self.clock = clock
         self.queue = AdmissionQueue(policy=scfg.queue_policy)
         self.metrics = ServingMetrics()
+        # autotune warmup: plan every linear shape at the decode batch
+        # bucket before the first prefill, so steady-state decode runs the
+        # tuned configuration from token one.  Table hits (a reloaded
+        # tuning table) make this free.
+        self.autotuned_shapes = 0
+        if scfg.autotune and cfg.pim_mode == "pim_sim":
+            from repro.pim import autotune as _autotune
+
+            _autotune.enable(True)
+            self.autotuned_shapes = _autotune.plan_for_params(
+                params, scfg.max_batch, trials=scfg.autotune_trials)
         # sliding-window slots are rings over their block list — only the
         # paged pool can size prefill capacity min(prompt, window), so
         # windowed configs page unconditionally

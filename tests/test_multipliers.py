@@ -2,11 +2,18 @@
 import numpy as np
 import pytest
 
+from hypothesis import given, settings, strategies as st
+
 from repro.pim import executor as ex
+from repro.pim.compressor42 import build_compressor42_multiplier
 from repro.pim.mult_serial import build_serial_multiplier
+from repro.pim.mult_serial_fast import build_fast_serial_multiplier
 from repro.pim.multpim import build_multpim
 
 MODELS = ("unlimited", "standard", "minimal")
+SERIAL_BUILDERS = {"serial": build_serial_multiplier,
+                   "serial_fast": build_fast_serial_multiplier,
+                   "compressor42": build_compressor42_multiplier}
 
 
 def _check(mult, rows=64, crossbars=2, seed=0):
@@ -37,6 +44,78 @@ def test_multpim_exact(model, n):
     m = build_multpim(n, model=model)
     m.program.validate()
     _check(m)
+
+
+@pytest.mark.parametrize("name", ["serial_fast", "compressor42"])
+@pytest.mark.parametrize("n", [2, 3, 4, 5, 8, 16, 32])
+def test_new_serial_multipliers_exact(name, n):
+    """The two autotune backends, bit-exact incl. tiny and odd widths
+    (compressor42's last pass degenerates to one multiplier bit when n is
+    odd; serial_fast's first/last iterations special-case n <= 2)."""
+    m = SERIAL_BUILDERS[name](n)
+    m.program.validate()
+    _check(m, rows=32)
+
+
+@pytest.mark.parametrize("name", ["serial_fast", "compressor42"])
+def test_new_serial_multipliers_exhaustive_4bit(name):
+    m = SERIAL_BUILDERS[name](4)
+    a, b = np.meshgrid(np.arange(16, dtype=np.uint64),
+                       np.arange(16, dtype=np.uint64))
+    a, b = a.reshape(1, -1), b.reshape(1, -1)
+    state = ex.blank_state(1, m.program.cfg.n, a.shape[1])
+    state = ex.write_numbers(state, m.a_cols, a)
+    state = ex.write_numbers(state, m.b_cols, b)
+    state = ex.execute(state, m.program.to_microcode())
+    got = ex.read_numbers(state, m.result_cols, a.shape[1])
+    assert np.array_equal(got, a * b)
+
+
+@pytest.mark.slow
+@settings(deadline=None, max_examples=20)
+@given(a=st.integers(0, 255), b=st.integers(0, 255),
+       name=st.sampled_from(["serial_fast", "compressor42"]))
+def test_new_serial_multipliers_property_8bit(a, b, name):
+    m = SERIAL_BUILDERS[name](8)
+    av = np.full((1, 1), a, np.uint64)
+    bv = np.full((1, 1), b, np.uint64)
+    state = ex.blank_state(1, m.program.cfg.n, 1)
+    state = ex.write_numbers(state, m.a_cols, av)
+    state = ex.write_numbers(state, m.b_cols, bv)
+    state = ex.execute(state, m.program.to_microcode())
+    got = ex.read_numbers(state, m.result_cols, 1)
+    assert int(got[0, 0]) == a * b
+
+
+def test_new_serial_multipliers_beat_nor_baseline_cycles():
+    """The point of registering them: fewer cycles than the NOR serial
+    multiplier at 32 bits (FELIX mixed-gate adders vs 9-gate NOR FAs)."""
+    base = build_serial_multiplier(32).program.stats().cycles
+    for name in ("serial_fast", "compressor42"):
+        c = SERIAL_BUILDERS[name](32).program.stats().cycles
+        assert c < base, (name, c, base)
+
+
+def test_mult_registry_kind_dispatch():
+    """PR 5 pattern: kinds partition the registry — state executors and
+    multiplier algorithms must reject each other by name."""
+    from repro.pim import engine
+
+    names = engine.backends()
+    for nm in ("serial", "serial_fast", "compressor42"):
+        assert nm in names
+        assert engine.backend_kind(nm) == "mult"
+    assert engine.backend_kind("scan") == "state"
+    built = engine.build_multiplier("serial_fast", 8)
+    assert built.n_bits == 8
+    with pytest.raises(ValueError, match="not a multiplier algorithm"):
+        engine.build_multiplier("scan", 8)
+    with pytest.raises(ValueError, match="not a multiplier algorithm"):
+        engine.build_multiplier("quant_tp", 8)
+    with pytest.raises(ValueError, match="unknown backend"):
+        engine.build_multiplier("does-not-exist", 8)
+    with pytest.raises(ValueError, match="not a crossbar-state executor"):
+        engine.execute_state(None, None, backend="compressor42")
 
 
 def test_paper_speedups_32bit():

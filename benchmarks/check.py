@@ -60,6 +60,20 @@ lost/duplicated requests and tokens identical to the single-scheduler
 oracle, so any flip is a drain/requeue correctness regression, never
 noise).
 
+The chunked-prefill rows gate the decode-interleaving contract:
+``chunked/*_p99_tpot_improvement`` floors at 2.0 — the ratio of the
+monolithic run's p99 inter-token gap over the chunked+packed run's, per
+PIM mode, on the suite's fixed bursty trace (one very long prompt
+stalls every decoding slot for a whole prefill unless chunking bounds
+the stall to one 64-token chunk; the issue's acceptance bar is chunked
+p99 TPOT <= 0.5x unchunked, i.e. ratio >= 2, and the measured values
+sit at 2.7-5.7x); ``chunked/*_tokens_bit_exact`` booleans gate chunked
++packed generations staying token-identical to whole-prompt prefill
+(scheduling is a latency optimization, never a semantic one — any flip
+is a chunk-resume or segment-mask correctness regression); the
+``chunked/packed_prefill_calls`` row is descriptive (chunk/pack
+counters), not gated.
+
 The autotune suite rows gate the partition autotuner's contract:
 ``autotune/*_picked_vs_default`` floors at 1.0 — the tuner's pick is the
 argmin of a timed race that always contains the engine's hardcoded

@@ -14,7 +14,13 @@ architectures — which page unconditionally — serve as rings over their
 block lists.  ``--prefix-cache`` (implies paged) attaches the trie prefix
 index with copy-on-write sharing — pair it with ``--shared-prefix N`` to
 give every synthetic prompt one N-token system prompt and watch warm
-admits skip its prefill entirely.
+admits skip its prefill entirely.  ``--prefill-chunk N`` +
+``--step-token-budget B`` interleave long-prompt prefill with decode
+steps (chunked prefill: no step runs more than ``B`` prefill tokens, so
+decode TPOT jitter stays bounded under long-prompt bursts), and
+``--packed-prefill`` batches short queued prompts into one segment-masked
+prefill call; the ``[chunked]`` line echoes p99 TPOT and chunk/pack
+counters, and generations stay bit-identical to whole prefill.
 
 **Multi-replica router** (``--replicas N``): instead of one scheduler,
 ``N`` independent engines — each its own device slice, mesh, KV pool,
@@ -75,13 +81,17 @@ def serve_trace(params, cfg, requests, *, max_batch: int, prompt_bucket: int,
                 mesh=None, paged: bool = False, block_size: int = 16,
                 num_blocks=None, prefix_cache: bool = False,
                 queue_policy: str = "fifo", autotune: bool = False,
-                autotune_trials: int = 1):
+                autotune_trials: int = 1, prefill_chunk=None,
+                step_token_budget=None, packed_prefill: bool = False):
     """Run a request trace through the scheduler; returns (results, summary)."""
     scfg = ServingConfig(max_batch=max_batch, prompt_bucket=prompt_bucket,
                          paged=paged, block_size=block_size,
                          num_blocks=num_blocks, prefix_cache=prefix_cache,
                          queue_policy=queue_policy, autotune=autotune,
-                         autotune_trials=autotune_trials)
+                         autotune_trials=autotune_trials,
+                         prefill_chunk=prefill_chunk,
+                         step_token_budget=step_token_budget,
+                         packed_prefill=packed_prefill)
     sched = Scheduler(params, cfg, scfg, mesh=mesh)
     for req in requests:
         sched.submit_request(req)
@@ -156,6 +166,17 @@ def main():
                     help="trie prefix index over the paged pool with "
                          "refcounted copy-on-write block sharing; matched "
                          "prompt blocks skip prefill (implies --paged)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split long-prompt prefill into chunks of this "
+                         "many tokens interleaved with decode steps (a "
+                         "--block-size multiple; implies --paged)")
+    ap.add_argument("--step-token-budget", type=int, default=None,
+                    help="max prefill tokens one scheduler step may "
+                         "process (chunks + admissions); bounds decode "
+                         "TPOT jitter under long-prompt bursts")
+    ap.add_argument("--packed-prefill", action="store_true",
+                    help="pack bursts of short queued prompts into one "
+                         "segment-masked prefill call (implies --paged)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend one fixed N-token system prompt to every "
                          "synthetic request (the prefix-cache workload)")
@@ -225,7 +246,10 @@ def main():
                 paged=args.paged, block_size=args.block_size,
                 num_blocks=args.num_blocks, prefix_cache=args.prefix_cache,
                 queue_policy=args.queue_policy, autotune=args.autotune,
-                autotune_trials=args.autotune_trials)
+                autotune_trials=args.autotune_trials,
+                prefill_chunk=args.prefill_chunk,
+                step_token_budget=args.step_token_budget,
+                packed_prefill=args.packed_prefill)
             rcfg = RouterConfig(n_replicas=args.replicas,
                                 policy=args.router_policy,
                                 model_parallel=args.model_parallel)
@@ -239,7 +263,10 @@ def main():
                 block_size=args.block_size, num_blocks=args.num_blocks,
                 prefix_cache=args.prefix_cache,
                 queue_policy=args.queue_policy, autotune=args.autotune,
-                autotune_trials=args.autotune_trials)
+                autotune_trials=args.autotune_trials,
+                prefill_chunk=args.prefill_chunk,
+                step_token_budget=args.step_token_budget,
+                packed_prefill=args.packed_prefill)
         print(f"served {summary['n_finished']}/{summary['n_requests']} "
               f"requests, {summary['total_tokens']} tokens @ "
               f"{summary['tokens_per_s']:.0f} tok/s "
@@ -265,6 +292,13 @@ def main():
                   f"{summary['mean_ttft_miss_s'] * 1e3:.0f}ms | "
                   f"{summary['peak_blocks_shared']:.0f} blocks shared, "
                   f"{summary['cow_copies']:.0f} COW copies")
+        if (args.prefill_chunk or args.step_token_budget
+                or args.packed_prefill):
+            print(f"[chunked] p99 TPOT {summary['p99_tpot_s'] * 1e3:.1f}ms "
+                  f"| {summary['prefill_chunks']} prefill chunks, "
+                  f"{summary['packed_prefills']} packed prefills "
+                  f"(chunk {args.prefill_chunk}, budget "
+                  f"{args.step_token_budget})")
         if fleet:
             per = ", ".join(f"r{r}: {v:.0f}" for r, v in
                             sorted(summary["per_replica_tok_s"].items()))

@@ -28,22 +28,38 @@ def _repeat_kv(k, n_rep: int):
 
 
 def direct_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
-                     q_offset: int = 0) -> jnp.ndarray:
+                     q_offset: int = 0,
+                     segment_ids: Optional[jnp.ndarray] = None,
+                     positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Materialized-scores attention (exact HLO flop accounting; used by the
-    dry-run cost lowering — memory comes from the flash lowering)."""
+    dry-run cost lowering — memory comes from the flash lowering).
+
+    ``positions``/``segment_ids``: packed-prefill support.  ``positions``
+    (S,) replaces the arange-derived q/k positions (requires Sq == Sk —
+    q and k cover the same packed token stream); ``segment_ids`` (S,)
+    adds a block-diagonal mask so tokens never attend across segments.
+    """
     b, sq, h, d = q.shape
     _, sk, hkv, _ = k.shape
     k = _repeat_kv(k, h // hkv)
     v = _repeat_kv(v, h // hkv)
     s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                    preferred_element_type=jnp.float32) / math.sqrt(d)
-    q_pos = q_offset + jnp.arange(sq)
-    k_pos = jnp.arange(sk)
+    if positions is not None:
+        if sq != sk:
+            raise ValueError("positions requires Sq == Sk (packed prefill)")
+        q_pos = k_pos = jnp.asarray(positions, jnp.int32)
+    else:
+        q_pos = q_offset + jnp.arange(sq)
+        k_pos = jnp.arange(sk)
     mask = jnp.ones((sq, sk), bool)
     if causal:
         mask &= q_pos[:, None] >= k_pos[None, :]
     if window is not None:
         mask &= q_pos[:, None] - k_pos[None, :] < window
+    if segment_ids is not None:
+        seg = jnp.asarray(segment_ids, jnp.int32)
+        mask &= seg[:, None] == seg[None, :]
     s = jnp.where(mask[None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     return jnp.einsum("bhqk,bkhd->bqhd", p, v,
@@ -52,11 +68,16 @@ def direct_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
 
 def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
                     q_offset: int = 0, block_q: int = 512,
-                    block_k: int = 512) -> jnp.ndarray:
+                    block_k: int = 512,
+                    segment_ids: Optional[jnp.ndarray] = None,
+                    positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """q: (B, Sq, H, D), k/v: (B, Sk, Hkv, D) -> (B, Sq, H, D).
 
     ``q_offset``: absolute position of q[0] (for prefill continuation).
     ``window``: sliding-window radius (attend to keys in (pos-window, pos]).
+    ``positions``/``segment_ids``: packed-prefill support — ``positions``
+    (S,) replaces the arange-derived positions for both q and k (requires
+    Sq == Sk), ``segment_ids`` (S,) masks cross-segment pairs.
     """
     b, sq, h, d = q.shape
     _, sk, hkv, _ = k.shape
@@ -85,19 +106,44 @@ def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
     vb = dctx.shard(vb, None, dp, tp, None, None)
     scale = 1.0 / math.sqrt(d)
 
-    q_pos_base = jnp.arange(block_q)
-    k_pos_base = jnp.arange(block_k)
+    # Per-block position/segment vectors.  Default path derives positions
+    # from block indices (identical masks to an arange over the stream);
+    # the packed path scans explicit per-token vectors instead.
+    if positions is not None:
+        if sq != sk:
+            raise ValueError("positions requires Sq == Sk (packed prefill)")
+        posv = jnp.asarray(positions, jnp.int32)
+        q_posb = jnp.pad(posv, (0, pad_q)).reshape(nq, block_q)
+        k_posb = jnp.pad(posv, (0, pad_k)).reshape(nk, block_k)
+    else:
+        q_posb = (q_offset + jnp.arange(sq_p, dtype=jnp.int32)
+                  ).reshape(nq, block_q)
+        k_posb = jnp.arange(sk_p, dtype=jnp.int32).reshape(nk, block_k)
+    use_seg = segment_ids is not None
+    if use_seg:
+        segv = jnp.asarray(segment_ids, jnp.int32)
+        q_segb = jnp.pad(segv, (0, pad_q), constant_values=-1
+                         ).reshape(nq, block_q)
+        k_segb = jnp.pad(segv, (0, pad_k), constant_values=-1
+                         ).reshape(nk, block_k)
+
+    k_idx_base = jnp.arange(block_k)
 
     @functools.partial(jax.checkpoint, prevent_cse=False)
     def q_step(_, qi_q):
-        qi, qblk = qi_q
-        q_pos = q_offset + qi * block_q + q_pos_base  # (Bq,)
+        if use_seg:
+            qblk, q_pos, q_seg = qi_q
+        else:
+            qblk, q_pos = qi_q
+            q_seg = None
 
         @functools.partial(jax.checkpoint, prevent_cse=False)
         def k_step(carry, ki_kv):
             m, l, acc = carry
-            ki, kblk, vblk = ki_kv
-            k_pos = ki * block_k + k_pos_base
+            if use_seg:
+                ki, kblk, vblk, k_pos, k_seg = ki_kv
+            else:
+                ki, kblk, vblk, k_pos = ki_kv
             s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk,
                            preferred_element_type=jnp.float32) * scale
             mask = jnp.ones((block_q, block_k), bool)
@@ -105,7 +151,9 @@ def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
                 mask &= q_pos[:, None] >= k_pos[None, :]
             if window is not None:
                 mask &= q_pos[:, None] - k_pos[None, :] < window
-            mask &= (k_pos < sk)[None, :]  # kv padding
+            if use_seg:
+                mask &= q_seg[:, None] == k_seg[None, :]
+            mask &= (ki * block_k + k_idx_base < sk)[None, :]  # kv padding
             s = jnp.where(mask[None, None], s, NEG_INF)
             m_new = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - m_new[..., None])
@@ -119,12 +167,14 @@ def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
         m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, h, block_q), jnp.float32)
         a0 = jnp.zeros((b, h, block_q, d), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
-            k_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        k_xs = ((jnp.arange(nk), kb, vb, k_posb, k_segb) if use_seg
+                else (jnp.arange(nk), kb, vb, k_posb))
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0), k_xs)
         out = acc / jnp.maximum(l, 1e-30)[..., None]
         return None, out.astype(q.dtype)
 
-    _, ob = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    q_xs = (qb, q_posb, q_segb) if use_seg else (qb, q_posb)
+    _, ob = jax.lax.scan(q_step, None, q_xs)
     out = ob.transpose(1, 0, 3, 2, 4).reshape(b, sq_p, h, d)
     return out[:, :sq]
 

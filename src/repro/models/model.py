@@ -209,7 +209,7 @@ def _dequantize_kv(q, scale, dtype):
 
 
 def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
-                    causal=True, block_tables=None):
+                    causal=True, block_tables=None, segment_ids=None):
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     quant = cfg.kv_cache_dtype == "int8"
@@ -331,6 +331,26 @@ def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
                              "v": v.astype(cfg.compute_dtype)}
             y = linear(out.reshape(b, s, h * hd), p["wo"])
             return x + y, new_cache
+        if segment_ids is not None:
+            # Packed prefill: several prompts share one (1, L) stream.
+            # ``positions`` is the per-token position vector (restarting at
+            # 0 per segment; it already drove RoPE above) and the segment
+            # mask keeps attention block-diagonal.  The emitted cache is
+            # the *raw packed* k/v — per-segment ``start`` offsets in the
+            # pool's assign closure unpack it, so no ring roll or headroom
+            # padding here (windowed packing is gated to plen <= window,
+            # where ring layout == dense layout).
+            out = attn_fn(q, k, v, causal=causal, window=window,
+                          segment_ids=segment_ids, positions=positions)
+            if quant:
+                kq, ks = _quantize_kv(k)
+                vq, vs = _quantize_kv(v)
+                new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                new_cache = {"k": k.astype(cfg.compute_dtype),
+                             "v": v.astype(cfg.compute_dtype)}
+            y = linear(out.reshape(b, s, h * hd), p["wo"])
+            return x + y, new_cache
         out = attn_fn(q, k, v, causal=causal, window=window)
         if mode == "prefill":
             if cfg.sliding_window:
@@ -433,13 +453,15 @@ def _xlstm(x, p, cfg: ModelConfig, mode, cache, kind):
 
 
 def apply_block(kind: str, x, p, cfg: ModelConfig, *, positions, mode,
-                cache=None, pos=None, memory=None, block_tables=None):
+                cache=None, pos=None, memory=None, block_tables=None,
+                segment_ids=None):
     """Returns (x, cache_out or None)."""
     out_cache = {}
     if kind in ("ad", "ae", "ar", "adx", "enc"):
         x, c = _self_attention(x, p, cfg, positions, mode, cache, pos,
                                causal=(kind != "enc"),
-                               block_tables=block_tables)
+                               block_tables=block_tables,
+                               segment_ids=segment_ids)
         if c:
             out_cache.update(c)
     if kind == "adx":
@@ -472,7 +494,8 @@ def apply_block(kind: str, x, p, cfg: ModelConfig, *, positions, mode,
 # ==========================================================================
 
 def _decoder_stack(params, x, cfg: ModelConfig, *, positions, mode,
-                   caches=None, pos=None, memory=None, block_tables=None):
+                   caches=None, pos=None, memory=None, block_tables=None,
+                   segment_ids=None):
     """Scan over super-blocks. caches: dict pos->stacked cache (or None).
     ``block_tables`` is shared by every layer (one slot->physical-block map
     for the whole paged pool), so it rides the closure, not the scan."""
@@ -485,7 +508,8 @@ def _decoder_stack(params, x, cfg: ModelConfig, *, positions, mode,
             cslice = layer_inputs[1].get(str(i)) if layer_inputs[1] else None
             x, c = apply_block(kind, x, pslice, cfg, positions=positions,
                                mode=mode, cache=cslice, pos=pos, memory=memory,
-                               block_tables=block_tables)
+                               block_tables=block_tables,
+                               segment_ids=segment_ids)
             if c is not None:
                 new_caches[str(i)] = c
         return x, (new_caches or None)
@@ -661,6 +685,42 @@ def prefill(params, batch, cfg: ModelConfig, last_index=None, prefix=None):
             xl = jnp.take_along_axis(
                 x, last_index[:, None, None].astype(jnp.int32), axis=1)[:, 0]
         logits = unembed(xl, _unembed_table(params, cfg))
+        return logits.astype(jnp.float32), caches
+
+
+def prefill_packed(params, tokens, positions, segment_ids, last_index,
+                   cfg: ModelConfig):
+    """Prefill several prompts packed into one (1, L) token stream.
+
+    ``positions`` (L,) int32 restarts at 0 for each prompt (driving RoPE
+    and the causal/window masks), ``segment_ids`` (L,) int32 keeps
+    attention block-diagonal — one prompt's tokens never attend to
+    another's, so each segment's logits and KV are bit-identical to its
+    own unpacked ``prefill`` (padding carries segment id -1 and position
+    0, which no real segment matches).  ``last_index`` (K,) int32 indexes
+    each segment's final prompt token in the stream; K is fixed (the
+    scheduler passes ``max_batch``, padding unused entries with 0) so a
+    short burst never retraces on burst size.  Returns ``((K, V) logits,
+    packed caches)`` — cache leaves keep the raw packed (1, L) stream
+    layout; ``PagedCachePool.admit(start=)`` unpacks per segment.
+
+    Full-attention stacks only (same gate as the prefix-resume path:
+    recurrent state folds segments together, MoE routing is
+    batch-coupled); windowed configs only for segments ``<= window``.
+    """
+    with _pim_ctx(cfg):
+        x = _embed_in(params, tokens, cfg)
+        x, caches = _decoder_stack(params, x, cfg, positions=positions,
+                                   mode="prefill",
+                                   segment_ids=segment_ids)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        xl = x[0, last_index.astype(jnp.int32)]     # (K, d)
+        table = _unembed_table(params, cfg)
+        # one (1, d) unembed per segment: a (K, d) matmul picks a different
+        # reduction order than the (1, d) row the unpacked prefill runs,
+        # and bit-exactness vs unpacked is the packed path's contract
+        logits = jnp.concatenate(
+            [unembed(xl[i:i + 1], table) for i in range(xl.shape[0])], axis=0)
         return logits.astype(jnp.float32), caches
 
 

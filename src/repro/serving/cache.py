@@ -396,10 +396,13 @@ class PagedCachePool:
         window = cfg.sliding_window
         lcap, bs = self.lcap, block_size
 
-        def assign(pool, request_cache, table_row, slot, plen):
+        def assign(pool, request_cache, table_row, slot, plen, start):
             def paged_leaf(c, rleaf):
                 # rleaf (ns, 1, cap_p, ...): dense positions 0..cap_p-1, or
-                # — windowed — position p at ring index p % cap_p.
+                # — windowed — position p at ring index p % cap_p.  ``start``
+                # offsets the source read: a packed prefill emits several
+                # segments in one (1, L) stream, and each segment's admit
+                # reads its own span ``start..start+plen-1`` of it.
                 cap_p = rleaf.shape[2]
                 r = jnp.arange(lcap)
                 if window:
@@ -410,7 +413,7 @@ class PagedCachePool:
                 else:
                     p_r = r
                     valid = r < plen
-                src = p_r % cap_p
+                src = (start + p_r) % cap_p
                 logical = jnp.take(rleaf[:, 0], src, axis=1)  # (ns, lcap,...)
                 vshape = (1, lcap) + (1,) * (logical.ndim - 2)
                 logical = jnp.where(valid.reshape(vshape), logical, 0)
@@ -613,12 +616,17 @@ class PagedCachePool:
             self.caches = self._zero_block(self.caches, jnp.int32(b))
         self._free.extend(reversed(dropped))
 
-    def can_admit(self, n_tokens: int, prefix_tokens: int = 0) -> bool:
+    def can_admit(self, n_tokens: int, prefix_tokens: int = 0,
+                  extra_reserved: int = 0) -> bool:
         """Whether the free list covers a request writing ``n_tokens``
         positions, of which the leading ``prefix_tokens`` arrive mapped
         from the prefix index (no allocation).  Budgets the request's own
         worst-case COW copies plus every outstanding debt, reclaiming
-        LRU index-only blocks under pressure before giving up."""
+        LRU index-only blocks under pressure before giving up.
+
+        ``extra_reserved``: blocks already spoken for by earlier members
+        of the same batch (packed prefill collects several admits before
+        allocating any — each check must budget its predecessors)."""
         need = self.blocks_needed(n_tokens)
         mapped = min(prefix_tokens // self.block_size, need)
         fresh = need - mapped
@@ -627,7 +635,7 @@ class PagedCachePool:
             # the wrapping ring may COW every mapped block and (with the
             # index attached) every own block it registers
             debt = mapped + (fresh if self.prefix is not None else 0)
-        want = fresh + debt + int(self._cow_debt.sum())
+        want = fresh + debt + int(self._cow_debt.sum()) + extra_reserved
         if want > len(self._free):
             self._reclaim(want - len(self._free))
         return want <= len(self._free)
@@ -705,7 +713,7 @@ class PagedCachePool:
     # ---- pool ops ----------------------------------------------------
 
     def admit(self, slot: int, request_cache, plen: int, n_tokens: int,
-              *, prompt=None, prefix_blocks=None) -> None:
+              *, prompt=None, prefix_blocks=None, start: int = 0) -> None:
         """Reserve blocks for ``n_tokens`` total positions and install the
         (batch-1) prefill cache of a ``plen``-token prompt into ``slot``.
 
@@ -714,8 +722,18 @@ class PagedCachePool:
         of the resumed prefill (positions ``m..plen-1``), scattered at
         block offset ``m``.  ``prompt`` (when the prefix index is
         attached) registers the request's fully covered blocks for future
-        hits.  Callers must check :meth:`can_admit` first; an insufficient
-        free list here is a scheduler bug, not back-pressure.
+        hits.  ``start`` offsets the source read into ``request_cache``
+        — a packed prefill emits several segments in one stream and each
+        segment admits from its own span (incompatible with
+        ``prefix_blocks``; packed segments are trie misses by
+        construction).  Callers must check :meth:`can_admit` first; an
+        insufficient free list here is a scheduler bug, not back-pressure.
+
+        A *chunked* admit passes ``plen < plen_total`` with ``n_tokens``
+        covering the whole request — the full reservation happens up
+        front (mid-prefill block reservation), later chunks land via
+        :meth:`extend`, and ``prompt=None`` defers trie registration to
+        :meth:`register_prefix` at completion.
         """
         if self._slot_blocks[slot]:
             raise RuntimeError(f"slot {slot} already holds blocks")
@@ -752,12 +770,47 @@ class PagedCachePool:
         else:
             self.caches = self._assign(self.caches, request_cache,
                                        jnp.asarray(self._table[slot]),
-                                       jnp.int32(slot), jnp.int32(plen))
+                                       jnp.int32(slot), jnp.int32(plen),
+                                       jnp.int32(start))
         wrap = self._will_wrap(n_tokens)
         if wrap:
             self._cow_debt[slot] += len(mapped)
         if self.prefix is not None and prompt is not None:
             self._register(slot, prompt, plen, wrap)
+
+    def extend(self, slot: int, request_cache, m: int, new_len: int) -> None:
+        """Install a prefill continuation chunk: ``request_cache`` holds
+        positions ``m..new_len-1`` of ``slot``'s prompt (the tail cache a
+        resumed prefill emits), scattered at block offset ``m`` into the
+        slot's *already reserved* blocks (see the chunked note on
+        :meth:`admit`).  ``m`` must be block-aligned; the first ``m //
+        block_size`` table entries are sentinel'd so the chunk's writes
+        never touch blocks earlier chunks filled."""
+        if not self._slot_blocks[slot]:
+            raise RuntimeError(f"slot {slot} holds no blocks to extend")
+        if m % self.block_size:
+            raise ValueError(f"extend offset {m} not block-aligned")
+        row = self._table[slot].copy()
+        row[:m // self.block_size] = 0
+        self.caches = self._assign_tail(
+            self.caches, request_cache, jnp.asarray(row),
+            jnp.int32(slot), jnp.int32(new_len), jnp.int32(m))
+
+    def slot_blocks(self, slot: int) -> List[int]:
+        """The slot's physical block ids in logical order (a copy) — the
+        chunked scheduler reads back the leading ``done // block_size``
+        of these as the prefix operand of the next chunk's resume."""
+        return list(self._slot_blocks[slot])
+
+    def register_prefix(self, slot: int, prompt, plen: int,
+                        n_tokens: int) -> None:
+        """Adopt a completed chunked prefill's prompt blocks into the
+        prefix index — the deferred ``prompt=`` leg of :meth:`admit`
+        (chunked admits pass ``prompt=None``; registering a half-written
+        prompt would serve bogus hits)."""
+        if self.prefix is None or prompt is None:
+            return
+        self._register(slot, prompt, plen, self._will_wrap(n_tokens))
 
     def fork(self, src: int, dst: int, pos: int, n_tokens: int) -> None:
         """Map ``src``'s content blocks (positions ``< pos``) into ``dst``

@@ -67,7 +67,10 @@ class ServingMetrics:
         self.queue_depth_samples: List[int] = []
         self.active_samples: List[int] = []
         self.pool_samples: List[Dict[str, float]] = []
+        self.tpot_samples: List[float] = []   # every inter-token gap
         self.deferred_admits = 0
+        self.prefill_chunks = 0     # chunked-prefill calls (first + resumed)
+        self.packed_prefills = 0    # multi-segment packed prefill calls
         # router-level fields; the router stamps these on the merged
         # fleet metrics (router_policy None => single-scheduler summary)
         self.router_policy: Optional[str] = None
@@ -88,6 +91,11 @@ class ServingMetrics:
         r = self.requests[rid]
         if r.first_token_time is None:
             r.first_token_time = now
+        else:
+            # inter-token gap (the TPOT population p99 is computed over):
+            # a decode step stalled behind a long prefill shows up here as
+            # one large gap — exactly what chunking is meant to bound
+            self.tpot_samples.append(now - r.last_token_time)
         r.last_token_time = now
         r.n_tokens += 1
 
@@ -117,6 +125,14 @@ class ServingMetrics:
         could not cover its reservation (paged-pool back-pressure)."""
         self.deferred_admits += 1
 
+    def on_prefill_chunk(self) -> None:
+        """One chunked-prefill call ran (first chunk or a resumed one)."""
+        self.prefill_chunks += 1
+
+    def on_packed_prefill(self) -> None:
+        """One packed prefill call served several queued prompts."""
+        self.packed_prefills += 1
+
     # ------------------------------------------------------------------
 
     @classmethod
@@ -139,7 +155,10 @@ class ServingMetrics:
             out.queue_depth_samples.extend(m.queue_depth_samples)
             out.active_samples.extend(m.active_samples)
             out.pool_samples.extend(m.pool_samples)
+            out.tpot_samples.extend(m.tpot_samples)
             out.deferred_admits += m.deferred_admits
+            out.prefill_chunks += m.prefill_chunks
+            out.packed_prefills += m.packed_prefills
         return out
 
     @staticmethod
@@ -155,6 +174,15 @@ class ServingMetrics:
         n = len(xs)
         mid = n // 2
         return xs[mid] if n % 2 else 0.5 * (xs[mid - 1] + xs[mid])
+
+    @staticmethod
+    def _p99(xs: List[float]) -> float:
+        """99th percentile (nearest-rank) — the chunked-prefill gate's
+        tail-latency view of the inter-token-gap population."""
+        xs = sorted(x for x in xs if not math.isnan(x))
+        if not xs:
+            return math.nan
+        return xs[min(len(xs) - 1, math.ceil(0.99 * len(xs)) - 1)]
 
     def summary(self) -> Dict[str, float]:
         rs = list(self.requests.values())
@@ -189,6 +217,10 @@ class ServingMetrics:
                              if busy and not math.isnan(busy) else math.nan),
             "mean_ttft_s": self._mean([r.ttft for r in rs]),
             "mean_tpot_s": self._mean([r.tpot for r in rs]),
+            # tail of the raw inter-token-gap population (not per-request
+            # means): a decode stall behind a monolithic prefill is one
+            # huge gap, so this is what chunked prefill improves
+            "p99_tpot_s": self._p99(self.tpot_samples),
             "mean_queue_wait_s": self._mean([r.queue_wait for r in rs]),
             "p50_queue_wait_s": self._p50([r.queue_wait for r in rs]),
             "max_queue_depth": max(self.queue_depth_samples, default=0),
@@ -202,6 +234,8 @@ class ServingMetrics:
             "mean_block_occupancy": occ,
             "mean_internal_frag": frag,
             "deferred_admits": self.deferred_admits,
+            "prefill_chunks": self.prefill_chunks,
+            "packed_prefills": self.packed_prefills,
             # prefix caching: hit rate over admitted requests, prompt
             # tokens served straight from the index (no prefill compute),
             # and the TTFT split that the warm/cold benchmark gate reads

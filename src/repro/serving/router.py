@@ -66,7 +66,7 @@ from repro.dist.partitioning import replica_slices
 from repro.runtime.fault_tolerance import ElasticMesh, StragglerMonitor
 from repro.serving.metrics import ServingMetrics
 from repro.serving.queue import AdmissionQueue, Request, make_request
-from repro.serving.scheduler import Scheduler, ServingConfig
+from repro.serving.scheduler import Scheduler, ServingConfig, _idle_sleep
 
 __all__ = ["FleetClock", "FailurePlan", "RouterConfig", "Replica",
            "Router", "ROUTER_POLICIES"]
@@ -410,15 +410,12 @@ class Router:
             if self._fleet:
                 self.clock.advance_to(head.arrival_time)
                 continue
-            before = self.clock()
-            time.sleep(min(max(head.arrival_time - before, 0.0), 1e-3))
-            if self.clock() == before:
-                stalls += 1
-                if stalls > 1000:
-                    raise RuntimeError(
-                        "run(): clock is not advancing while requests "
-                        "wait to arrive; with an injected test clock, "
-                        "advance it and call step() yourself")
+            stalls = _idle_sleep(self.clock, head.arrival_time, stalls)
+            if stalls > 1000:
+                raise RuntimeError(
+                    "run(): clock is not advancing while requests "
+                    "wait to arrive; with an injected test clock, "
+                    "advance it and call step() yourself")
         return dict(self.results)
 
     # ---- fleet metrics -----------------------------------------------

@@ -7,15 +7,47 @@ step's shapes never change, so steady-state decode **never recompiles** no
 matter how requests churn (``decode_traces`` counts retraces; tests pin it
 to 1).  Each scheduler step:
 
-1. *backfill* — every free slot is filled from the admission queue
+1. *resume* — every mid-prefill slot advances by one prompt chunk
+   (chunked prefill, below); a prompt whose last chunk lands emits its
+   first token and joins the decode batch.
+2. *backfill* — every free slot is filled from the admission queue
    (lowest-numbered slot first, FIFO requests): the prompt is right-padded
    to a ``prompt_bucket`` multiple, prefilled in one shot (logits read at
    the true last token via ``prefill(last_index=...)``), the resulting
    cache written into the slot of the persistent :class:`CachePool`, and
    the first token emitted — that's the request's TTFT.
-2. *decode* — one batched step advances every active slot by one token;
+3. *decode* — one batched step advances every decoding slot by one token;
    finished slots (budget exhausted or EOS) are evicted and become
    backfill targets on the next step.
+
+**Chunked prefill** (``ServingConfig(prefill_chunk=, step_token_budget=)``)
+splits a long prompt across steps so it never monopolizes a step: the
+first chunk admits normally (reserving the request's *full* block need up
+front), the slot is marked mid-prefill — occupied but excluded from the
+decode batch's active mask — and each later step resumes one more chunk
+through the block-aligned ``prefill(prefix=...)`` path, reading the
+slot's own already-written blocks back as the prefix.  The last chunk
+emits the first token exactly as whole prefill would, so generations are
+bit-identical.  ``step_token_budget`` caps the prefill tokens (resumed
+chunks + new admissions, real token counts) any single step processes —
+the decode step that follows is never delayed by more than one budget's
+worth of prefill, which is what bounds TPOT jitter under bursty
+long-prompt traffic.  The first work item of a step is always allowed
+(progress guarantee).  A drained mid-prefill slot requeues its request
+like any other (partial blocks are evicted; the rerun is bit-identical).
+
+**Packed prefill** (``ServingConfig(packed_prefill=True)``) batches a
+burst of short queued prompts into *one* ``prefill_packed`` call:
+segments ride a single (1, L) token stream with per-segment position
+offsets and a block-diagonal segment mask, so one compile-stable call
+(one trace per packed length L; the segment count is pinned to
+``max_batch``) replaces N prompt-sized prefills while each segment's
+logits and KV stay bit-identical to its own unpacked prefill.  Heads are
+popped in queue-policy order and packing stops at the first ineligible
+head — no skip-ahead, so FIFO fairness and deferral semantics are
+untouched.  Both features require the paged pool and the same
+KV-separability the prefix cache needs (no recurrent blocks, no MoE);
+windowed prompts participate only while they fit inside the window.
 
 Bucketed prefill retraces once per distinct bucket length (a handful of
 compiles, amortized over the run) and is exact for attention stacks; for
@@ -72,6 +104,33 @@ from repro.serving.queue import AdmissionQueue, Request, make_request
 
 __all__ = ["ServingConfig", "Scheduler"]
 
+#: Packed-prefill stream cap: keeping the packed length inside one flash
+#: key block (block_k = 512) means every segment's online-softmax pass
+#: sees the same single-block reduction as its unpacked prefill, which is
+#: what keeps packing bit-exact.  Far above any short-prompt burst worth
+#: packing anyway — longer prompts chunk instead.
+_PACK_MAX_TOKENS = 512
+
+
+def _idle_sleep(clock, arrival: float, stalls: int,
+                cap: float = 0.25) -> int:
+    """Sleep toward ``arrival`` on a real clock; returns the stall count.
+
+    One short (1 ms) probe first distinguishes an advancing wall clock
+    from an injected test clock (which never moves while we sleep) — once
+    the clock demonstrably advances, the rest of the gap is slept in one
+    ``cap``-bounded slice instead of thousands of 1 ms spins.
+    """
+    before = clock()
+    time.sleep(min(max(arrival - before, 0.0), 1e-3))
+    now = clock()
+    if now == before:
+        return stalls + 1
+    remaining = arrival - now
+    if remaining > 0:
+        time.sleep(min(remaining, cap))
+    return 0
+
 
 @dataclasses.dataclass(frozen=True)
 class ServingConfig:
@@ -86,6 +145,15 @@ class ServingConfig:
     defer when it runs short.  Sliding-window configs require paging (a
     windowed slot is a ring over its block list) and enable it
     automatically.
+
+    ``prefill_chunk=N`` splits every long prompt's prefill into N-token
+    chunks interleaved with decode steps (N must be a ``block_size``
+    multiple — chunk resumes ride the block-aligned prefix-resume path);
+    ``step_token_budget=B`` caps the prefill tokens one step may process;
+    ``packed_prefill=True`` batches short queued prompts into one
+    segment-masked prefill call.  All three imply the paged pool; chunked
+    and packed prefill additionally require prefix-separable KV (no
+    recurrent blocks, no MoE) — see the module docstring.
 
     ``autotune=True`` runs the partition autotuner at construction when the
     model decodes on the crossbar simulator (``cfg.pim_mode == "pim_sim"``):
@@ -107,6 +175,11 @@ class ServingConfig:
     queue_policy: str = "fifo"  # admission order: "fifo" | "sjf"
     autotune: bool = False      # plan crossbar GEMMs at warmup (pim_sim)
     autotune_trials: int = 1    # timed trials per candidate during warmup
+    prefill_chunk: Optional[int] = None  # split prefill into chunks of this
+    #   many tokens (block_size multiple; implies paged)
+    step_token_budget: Optional[int] = None  # max prefill tokens per step
+    packed_prefill: bool = False  # pack short prompts into one prefill call
+    #   (implies paged)
 
 
 class Scheduler:
@@ -145,6 +218,37 @@ class Scheduler:
                     f"{cfg.name}: prefix_cache is incompatible with MoE "
                     "(capacity dropping couples a token's KV to its "
                     "batch-mates)")
+        chunked = scfg.prefill_chunk is not None
+        if chunked or scfg.packed_prefill:
+            # both paths rebuild a slot's KV from per-token caches laid
+            # out by absolute position — the same separability the prefix
+            # cache needs (recurrent state folds the whole prefix into one
+            # vector; MoE capacity dropping couples a token's KV to its
+            # batch-mates)
+            what = "prefill_chunk" if chunked else "packed_prefill"
+            if cfg.has_recurrent_blocks:
+                raise ValueError(
+                    f"{cfg.name}: {what} is incompatible with SSM/xLSTM "
+                    "blocks (recurrent state is not prefix-separable)")
+            if cfg.n_experts:
+                raise ValueError(
+                    f"{cfg.name}: {what} is incompatible with MoE "
+                    "(capacity dropping couples a token's KV to its "
+                    "batch-mates)")
+        if chunked and (scfg.prefill_chunk < 1
+                        or scfg.prefill_chunk % scfg.block_size):
+            raise ValueError(
+                f"prefill_chunk={scfg.prefill_chunk} must be a positive "
+                f"multiple of block_size={scfg.block_size} (chunk resumes "
+                "are block-aligned)")
+        if scfg.step_token_budget is not None:
+            if scfg.step_token_budget < 1:
+                raise ValueError("step_token_budget must be >= 1")
+            if chunked and scfg.step_token_budget < scfg.prefill_chunk:
+                raise ValueError(
+                    f"step_token_budget={scfg.step_token_budget} below "
+                    f"prefill_chunk={scfg.prefill_chunk}: no step could "
+                    "ever schedule a chunk")
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
@@ -164,8 +268,11 @@ class Scheduler:
                 params, scfg.max_batch, trials=scfg.autotune_trials)
         # sliding-window slots are rings over their block list — only the
         # paged pool can size prefill capacity min(prompt, window), so
-        # windowed configs page unconditionally
-        if scfg.paged or scfg.prefix_cache or cfg.sliding_window:
+        # windowed configs page unconditionally; chunked/packed prefill
+        # scatter per-chunk/per-segment caches at block offsets, which
+        # only the paged layout supports
+        if (scfg.paged or scfg.prefix_cache or cfg.sliding_window
+                or chunked or scfg.packed_prefill):
             self.pool = PagedCachePool(
                 cfg, scfg.max_batch, cfg.max_seq_len,
                 block_size=scfg.block_size, num_blocks=scfg.num_blocks,
@@ -183,7 +290,15 @@ class Scheduler:
         self._remaining = np.zeros(B, np.int64)
         self._outputs: Dict[int, List[int]] = {}
         self._active_req: Dict[int, Request] = {}   # rid -> in-slot request
-        self._deferred_rid = -1     # dedupe: one deferral count per request
+        # chunked prefill: a slot can be occupied but still mid-prefill —
+        # excluded from the decode batch until its last chunk lands
+        self._prefilling = np.zeros(B, bool)
+        self._prefill_done = np.zeros(B, np.int64)  # prompt tokens cached
+        # dedupe: one deferral count per request per wait, tracked as a
+        # set — under SJF the head changes identity between steps, so a
+        # single "last deferred rid" would recount the original head when
+        # it defers again after an interloper
+        self._deferred_rids: set = set()
         self.decode_traces = 0      # python-body executions == jit retraces
 
         def _step(p, tokens, pos, active, caches, tables):
@@ -197,16 +312,30 @@ class Scheduler:
             lambda p, toks, li: M.prefill(p, {"tokens": toks}, cfg,
                                           last_index=li))
         # tail-resume prefill against a mapped prefix; retraces once per
-        # (prefix length, tail bucket) shape pair
+        # (prefix length, tail bucket) shape pair — chunked prefill rides
+        # the same jit (one trace per chunk boundary, covered by warmup)
         self._prefill_resume = jax.jit(
             lambda p, toks, li, px: M.prefill(p, {"tokens": toks}, cfg,
                                               last_index=li, prefix=px))
+        # packed prefill: one call covers a burst of short prompts;
+        # retraces once per packed stream length (K is pinned to max_batch)
+        self._prefill_packed = jax.jit(
+            lambda p, toks, pos, seg, li: M.prefill_packed(
+                p, toks, pos, seg, li, cfg))
 
     # ------------------------------------------------------------------
 
     @property
     def active_slots(self) -> np.ndarray:
+        """Occupied slots — including mid-prefill ones (they hold blocks
+        and count toward load; the router's least-loaded signal and
+        ``drain()`` must see them)."""
         return self._slot_rid >= 0
+
+    @property
+    def decoding_slots(self) -> np.ndarray:
+        """Occupied slots past prefill: the decode step's active mask."""
+        return self.active_slots & ~self._prefilling
 
     @property
     def n_active(self) -> int:
@@ -231,7 +360,13 @@ class Scheduler:
                 f"{req.max_new_tokens} exceeds cache capacity {cap}")
         if self.pool.paged:
             # a need beyond the whole pool would defer forever, not
-            # eventually: back-pressure only works for satisfiable requests
+            # eventually: back-pressure only works for satisfiable
+            # requests.  ``blocks_needed`` is sliding-window-aware: a
+            # windowed slot is a ring capped at ceil(window/block_size)
+            # blocks (``kv_blocks_for`` clamps to it), so a long windowed
+            # request — prompt + budget far past ``num_blocks *
+            # block_size`` — budgets only its ring here, never its raw
+            # token count (regression-locked in test_serving_chunked)
             need = self.pool.blocks_needed(plen + req.max_new_tokens)
             if need > self.pool.num_blocks - 1:
                 raise ValueError(
@@ -274,8 +409,231 @@ class Scheduler:
         self._slot_rid[slot] = -1
         self.pool.evict(slot)
 
-    def _admit(self) -> List[Tuple[int, int]]:
-        """Backfill free slots from the queue; returns (rid, token) firsts.
+    def _dense_prefill_ok(self, plen: int) -> bool:
+        """Whether chunked/packed prefill may serve a ``plen`` prompt: a
+        windowed slot's ring layout equals the dense layout only while the
+        prompt fits inside the window — past it, the cold whole-prefill
+        path (which lays the ring out directly) is the only exact one."""
+        w = self.cfg.sliding_window
+        return not w or plen <= w
+
+    def _packable(self, req: Request, m: int) -> bool:
+        """Whether ``req`` may join a packed prefill: trie misses only
+        (hits resume, they don't prefill the prompt), short enough to stay
+        inside one flash key block, below the chunking threshold (long
+        prompts chunk instead), and — windowed — inside the window."""
+        if m:
+            return False
+        plen = req.prompt.shape[0]
+        b = self._bucket(plen)
+        chunk = self.scfg.prefill_chunk
+        if chunk is not None and plen > chunk:
+            return False
+        if b > _PACK_MAX_TOKENS:
+            return False
+        w = self.cfg.sliding_window
+        return not w or b <= w
+
+    def _collect_pack(self, now: float, n_free: int,
+                      spent: int) -> List[Request]:
+        """Pop the (pre-validated, packable) head plus every immediately
+        following packable head that fits the pack — stopping at the first
+        ineligible one (no skip-ahead), at ``n_free`` slots, at the flash
+        block cap, at the step budget, or when the free list can't cover
+        the *cumulative* reservation (``can_admit(extra_reserved=)``)."""
+        budget = self.scfg.step_token_budget
+        first = self.queue.pop(now)
+        self._deferred_rids.discard(first.rid)
+        pack = [first]
+        total = self._bucket(first.prompt.shape[0])
+        reserved = self.pool.blocks_needed(
+            first.prompt.shape[0] + first.max_new_tokens)
+        while len(pack) < n_free:
+            head = self.queue.peek(now)
+            if head is None or head.arrival_time > now:
+                break
+            if self._prefix_on:
+                m = self.pool.prefix_match(head.prompt)[0]
+            else:
+                m = 0
+            if not self._packable(head, m):
+                break
+            b = self._bucket(head.prompt.shape[0])
+            if total + b > _PACK_MAX_TOKENS:
+                break
+            if budget is not None and spent + total + b > budget:
+                break
+            n_tok = head.prompt.shape[0] + head.max_new_tokens
+            if not self.pool.can_admit(n_tok, extra_reserved=reserved):
+                break
+            req = self.queue.pop(now)
+            assert req is head, "peek/pop selection must agree"
+            self._deferred_rids.discard(req.rid)
+            pack.append(req)
+            total += b
+            reserved += self.pool.blocks_needed(n_tok)
+        return pack
+
+    def _admit_packed(self, pack: List[Request], free: List[int],
+                      emitted: List[Tuple[int, int]]) -> int:
+        """One ``prefill_packed`` call for the whole pack; returns the
+        packed stream length (the step-budget cost).  Segment ``i``'s
+        prompt occupies ``starts[i]..starts[i]+plen-1`` of the stream
+        (bucket-aligned widths — matching the shapes unpacked bucketed
+        prefill runs keeps the reductions bit-identical), and its cache is
+        unpacked by ``PagedCachePool.admit(start=starts[i])``."""
+        widths = [self._bucket(r.prompt.shape[0]) for r in pack]
+        starts = np.concatenate([[0], np.cumsum(widths[:-1])]).astype(int)
+        L = int(sum(widths))
+        toks = np.full((1, L), self.scfg.pad_id, np.int32)
+        pos = np.zeros(L, np.int32)
+        seg = np.full(L, -1, np.int32)   # padding matches no real segment
+        last = np.zeros(self.scfg.max_batch, np.int32)  # K pinned: unused
+        #   entries read index 0 and are ignored host-side
+        for i, (r, s0, w) in enumerate(zip(pack, starts, widths)):
+            plen = r.prompt.shape[0]
+            toks[0, s0:s0 + plen] = r.prompt
+            pos[s0:s0 + w] = np.arange(w)
+            seg[s0:s0 + plen] = i
+            last[i] = s0 + plen - 1
+        logits, cache = self._prefill_packed(
+            self.params, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(seg), jnp.asarray(last))
+        self.metrics.on_packed_prefill()
+        firsts = np.asarray(jnp.argmax(logits, -1))
+        now = self.clock()
+        for i, r in enumerate(pack):
+            plen = r.prompt.shape[0]
+            first = int(firsts[i])
+            self.metrics.on_admit(r.rid, now)
+            self.metrics.on_token(r.rid, now)
+            self._outputs[r.rid] = [first]
+            emitted.append((r.rid, first))
+            if r.max_new_tokens <= 1 or first == self.scfg.eos_id:
+                # finished at admit: never touches a slot
+                self.metrics.on_finish(r.rid, now)
+                continue
+            slot = int(free.pop(0))
+            self.pool.admit(slot, cache, plen, plen + r.max_new_tokens,
+                            prompt=r.prompt if self._prefix_on else None,
+                            start=int(starts[i]))
+            self._slot_rid[slot] = r.rid
+            self._active_req[r.rid] = r
+            self._tokens[slot, 0] = first
+            self._pos[slot] = plen
+            self._remaining[slot] = r.max_new_tokens - 1
+        return L
+
+    def _begin_chunked(self, slot: int, req: Request, m: int,
+                       pblocks: List[int]) -> None:
+        """Admit ``req``'s *first* prefill chunk into ``slot`` and mark it
+        mid-prefill.  The pool reserves the request's full block need up
+        front (later chunks extend in place, they never allocate), so a
+        mid-prefill slot can always finish without deferring."""
+        chunk = self.scfg.prefill_chunk
+        plen = req.prompt.shape[0]
+        n_tok = plen + req.max_new_tokens
+        if m:
+            bucket = self._bucket_tail(chunk, m)
+            toks = np.full((1, bucket), self.scfg.pad_id, np.int32)
+            toks[0, :chunk] = req.prompt[m:m + chunk]
+            _, cache = self._prefill_resume(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([chunk - 1], jnp.int32),
+                self.pool.read_prefix(pblocks))
+            # prompt=None: a half-written prompt must not enter the trie —
+            # registration is deferred to the last chunk
+            self.pool.admit(slot, cache, m + chunk, n_tok,
+                            prefix_blocks=pblocks)
+        else:
+            bucket = self._bucket(chunk)
+            toks = np.full((1, bucket), self.scfg.pad_id, np.int32)
+            toks[0, :chunk] = req.prompt[:chunk]
+            _, cache = self._prefill(self.params, jnp.asarray(toks),
+                                     jnp.asarray([chunk - 1], jnp.int32))
+            self.pool.admit(slot, cache, chunk, n_tok)
+        self.metrics.on_admit(req.rid, self.clock(), prefix_tokens=m)
+        self.metrics.on_prefill_chunk()
+        self._slot_rid[slot] = req.rid
+        self._active_req[req.rid] = req
+        self._prefilling[slot] = True
+        self._prefill_done[slot] = m + chunk
+        # _pos tracks tokens written; the decode step's garbage write for
+        # this (inactive) slot lands at _pos — the exact position the next
+        # chunk's extend overwrites with real KV
+        self._pos[slot] = m + chunk
+        self._tokens[slot, 0] = 0
+        self._remaining[slot] = 0
+
+    def _chunk_step(self, slot: int, req: Request, done: int, tlen: int,
+                    emitted: List[Tuple[int, int]]) -> None:
+        """Resume one more chunk of a mid-prefill slot: the slot's own
+        written blocks are read back as the prefix (same jit as trie-hit
+        tail resume), the chunk's tail cache extends them in place, and
+        the *last* chunk emits the first token — exactly what whole
+        prefill would have produced."""
+        plen = req.prompt.shape[0]
+        new_len = done + tlen
+        bucket = self._bucket_tail(tlen, done)
+        toks = np.full((1, bucket), self.scfg.pad_id, np.int32)
+        toks[0, :tlen] = req.prompt[done:new_len]
+        prefix = self.pool.read_prefix(
+            self.pool.slot_blocks(slot)[:done // self.pool.block_size])
+        logits, cache = self._prefill_resume(
+            self.params, jnp.asarray(toks),
+            jnp.asarray([tlen - 1], jnp.int32), prefix)
+        self.pool.extend(slot, cache, done, new_len)
+        self.metrics.on_prefill_chunk()
+        self._prefill_done[slot] = new_len
+        self._pos[slot] = new_len
+        if new_len < plen:
+            return
+        # prompt fully cached: first token (the request's TTFT) and into
+        # the decode batch
+        first = int(np.asarray(jnp.argmax(logits, -1))[0])
+        now = self.clock()
+        self.metrics.on_token(req.rid, now)
+        self._outputs[req.rid] = [first]
+        emitted.append((req.rid, first))
+        self._prefilling[slot] = False
+        self._prefill_done[slot] = 0
+        if req.max_new_tokens <= 1 or first == self.scfg.eos_id:
+            self.metrics.on_finish(req.rid, now)
+            self._active_req.pop(req.rid, None)
+            self._slot_rid[slot] = -1
+            self.pool.evict(slot)
+            return
+        if self._prefix_on:
+            # deferred trie registration (admit passed prompt=None)
+            self.pool.register_prefix(slot, req.prompt, plen,
+                                      plen + req.max_new_tokens)
+        self._tokens[slot, 0] = first
+        self._remaining[slot] = req.max_new_tokens - 1
+
+    def _continue_prefills(self, emitted: List[Tuple[int, int]]) -> int:
+        """Advance every mid-prefill slot by one chunk (slot order);
+        returns the prefill tokens spent.  The first chunk of a step is
+        always allowed — further ones only while they fit the step
+        budget, so one long prompt cannot starve the decode batch and two
+        long prompts cannot starve each other."""
+        if not self._prefilling.any():
+            return 0
+        spent = 0
+        budget = self.scfg.step_token_budget
+        chunk = self.scfg.prefill_chunk
+        for slot in np.flatnonzero(self._prefilling):
+            req = self._active_req[int(self._slot_rid[slot])]
+            done = int(self._prefill_done[slot])
+            tlen = min(chunk, req.prompt.shape[0] - done)
+            if budget is not None and spent and spent + tlen > budget:
+                break
+            self._chunk_step(int(slot), req, done, tlen, emitted)
+            spent += tlen
+        return spent
+
+    def _admit(self, emitted: List[Tuple[int, int]], spent: int) -> int:
+        """Backfill free slots from the queue; appends (rid, token) firsts
+        to ``emitted`` and returns the updated prefill-token spend.
 
         FIFO with back-pressure: when the paged pool's free list cannot
         cover the head request's block reservation, admission *defers*
@@ -287,16 +645,24 @@ class Scheduler:
         occupies a slot, so the *same* slot is retried with the next
         queued request — a burst of one-token requests drains in a single
         scheduler step instead of one per step.
+
+        With ``prefill_chunk``, a prompt whose (post-trie-match) tail
+        exceeds the chunk admits its first chunk only and parks the slot
+        mid-prefill; with ``packed_prefill``, a run of packable heads is
+        popped into one ``prefill_packed`` call.  ``step_token_budget``
+        stops further admissions once this step's prefill spend (chunks
+        resumed + prompts admitted, real token counts) would exceed it —
+        the first work item of a step is always allowed.
         """
-        emitted: List[Tuple[int, int]] = []
-        free = iter(np.flatnonzero(~self.active_slots))
-        slot = next(free, None)
-        while slot is not None:
+        budget = self.scfg.step_token_budget
+        free = [int(s) for s in np.flatnonzero(~self.active_slots)]
+        while free:
             now = self.clock()
             head = self.queue.peek(now)
             if head is None or head.arrival_time > now:
                 break
-            n_tok = head.prompt.shape[0] + head.max_new_tokens
+            plen = head.prompt.shape[0]
+            n_tok = plen + head.max_new_tokens
             if self._prefix_on:
                 m, pblocks = self.pool.prefix_match(head.prompt)
                 ok = self.pool.can_admit(n_tok, prefix_tokens=m)
@@ -304,14 +670,37 @@ class Scheduler:
                 m, pblocks = 0, []
                 ok = self.pool.can_admit(n_tok)
             if not ok:
-                if head.rid != self._deferred_rid:   # count requests, not
-                    self._deferred_rid = head.rid    # ... steps spent waiting
+                if head.rid not in self._deferred_rids:  # count requests,
+                    self._deferred_rids.add(head.rid)    # not steps waiting
                     self.metrics.on_deferred_admit()
                 break
-            req = self.queue.pop(now)
-            assert req is head, "peek/pop selection must agree"
-            self._deferred_rid = -1    # the deferred head (if any) got in;
-            #                            the next deferral is a new event
+            chunk = self.scfg.prefill_chunk
+            chunked = (chunk is not None and plen - m > chunk
+                       and self._dense_prefill_ok(plen))
+            if chunked:
+                cost = chunk
+            elif m:
+                cost = self._bucket_tail(plen - m, m)
+            else:
+                cost = self._bucket(plen)
+            if budget is not None and spent and spent + cost > budget:
+                break
+            if (self.scfg.packed_prefill and not chunked
+                    and self._packable(head, m)):
+                pack = self._collect_pack(now, len(free), spent)
+                if len(pack) > 1:
+                    spent += self._admit_packed(pack, free, emitted)
+                    continue
+                req = pack[0]   # a pack of one admits like any other
+            else:
+                req = self.queue.pop(now)
+                assert req is head, "peek/pop selection must agree"
+                self._deferred_rids.discard(req.rid)  # admitted: a future
+                #   deferral of this rid is a new event
+            spent += cost
+            if chunked:
+                self._begin_chunked(free.pop(0), req, m, pblocks)
+                continue
             plen = req.prompt.shape[0]
             if m:
                 tlen = plen - m
@@ -343,26 +732,29 @@ class Scheduler:
                 # the same slot with the next queued request
                 self.metrics.on_finish(req.rid, now)
                 continue
+            slot = free.pop(0)
             if self._prefix_on:
-                self.pool.admit(int(slot), cache, plen, n_tok,
+                self.pool.admit(slot, cache, plen, n_tok,
                                 prompt=req.prompt, prefix_blocks=pblocks)
             else:
-                self.pool.admit(int(slot), cache, plen, n_tok)
+                self.pool.admit(slot, cache, plen, n_tok)
             self._slot_rid[slot] = req.rid
             self._active_req[req.rid] = req
             self._tokens[slot, 0] = first
             self._pos[slot] = plen
             self._remaining[slot] = req.max_new_tokens - 1
-            slot = next(free, None)
-        return emitted
+        return spent
 
     def step(self) -> List[Tuple[int, int]]:
-        """One scheduler step: backfill, then one batched decode step.
+        """One scheduler step: resume mid-prefill chunks, backfill, then
+        one batched decode step over the decoding slots.
 
         Returns the (rid, token) pairs emitted this step.
         """
-        emitted = self._admit()
-        active = self.active_slots
+        emitted: List[Tuple[int, int]] = []
+        spent = self._continue_prefills(emitted)
+        self._admit(emitted, spent)
+        active = self.decoding_slots
         if active.any():
             if self.pool.paged and self.pool.has_shared:
                 # copy-on-write: each active slot writes its KV at _pos
@@ -413,8 +805,11 @@ class Scheduler:
             self._outputs.pop(rid, None)
             self._slot_rid[slot] = -1
             self._remaining[slot] = 0
+            self._prefilling[slot] = False   # a mid-prefill slot drains
+            self._prefill_done[slot] = 0     # like any other: full restart
             self.pool.evict(int(slot))
             out.append(req)
+        self._deferred_rids.clear()
         out.extend(self.queue.clear())
         return out
 
@@ -443,14 +838,11 @@ class Scheduler:
             head = self.queue.peek(self.clock())
             if head is None:
                 continue
-            before = self.clock()
-            time.sleep(min(max(head.arrival_time - before, 0.0), 1e-3))
-            if self.clock() == before:
-                stalls += 1
-                if stalls > 1000:
-                    raise RuntimeError(
-                        "run(): clock is not advancing while requests wait "
-                        "to arrive; with an injected test clock, advance it "
-                        "and call step() yourself")
+            stalls = _idle_sleep(self.clock, head.arrival_time, stalls)
+            if stalls > 1000:
+                raise RuntimeError(
+                    "run(): clock is not advancing while requests wait "
+                    "to arrive; with an injected test clock, advance it "
+                    "and call step() yourself")
         return {rid: np.asarray(toks, np.int32)
                 for rid, toks in self._outputs.items()}

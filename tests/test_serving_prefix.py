@@ -9,7 +9,9 @@ while referenced, no leak at drain); COW must fire — and preserve other
 referents' bits — on fork divergent tails and on windowed ring wraps.
 
 Satellite regressions: a request finishing at admit must not consume its
-free-slot iteration; ``_deferred_rid`` must reset on successful admit;
+free-slot iteration; a deferred rid must reset on successful admit (now
+the ``_deferred_rids`` set — see test_serving_chunked for the SJF
+head-churn case);
 ``stats()`` must report logical ``tokens_reserved`` and physical
 ``tokens_in_use`` separately, with aligned keys across both pools.
 """

@@ -74,6 +74,23 @@ is a chunk-resume or segment-mask correctness regression); the
 ``chunked/packed_prefill_calls`` row is descriptive (chunk/pack
 counters), not gated.
 
+The spec-decode suite rows gate the self-speculative decoding contract:
+``spec/*_tokens_bit_exact`` booleans gate speculative generations
+staying token-identical to plain decode per verify mode {xla, quant_tp,
+pim_sim} — greedy acceptance commits exactly the verify mode's own
+greedy chain, so any flip is an acceptance/rollback correctness
+regression (the xla row pairs a float verify with an integer quant
+draft precisely so acceptance is imperfect and the exactness claim is
+non-trivial); ``spec/pim_sim_speculative_vs_plain`` floors at the 1.3x
+acceptance bar — verifying ``draft_k`` rows through the crossbar
+simulator costs about one single-row step (per-gate interpreter
+overhead dominates), so speculative tok/s must beat plain pim_sim
+decode — while the xla/quant_tp ratio rows floor at 0.05 ("ran at
+all"): their per-step cost scales with the verified width, so
+speculation is documented as a net loss there, not gated as a win; the
+``spec/mean_accept_len`` row is descriptive (acceptance histogram), not
+gated.
+
 The autotune suite rows gate the partition autotuner's contract:
 ``autotune/*_picked_vs_default`` floors at 1.0 — the tuner's pick is the
 argmin of a timed race that always contains the engine's hardcoded
@@ -111,6 +128,11 @@ current code and the file is rewritten on exit; bumping
 ``pim.autotune.TABLE_VERSION`` invalidates stale files loudly
 (``load_table`` raises on mismatch).
 
+Besides the stdout lines, every run renders the gated rows as a
+markdown pass/fail table: appended to ``$GITHUB_STEP_SUMMARY`` when set
+(the CI run page then shows which gate tripped without downloading the
+``BENCH_partitionpim`` artifact), printed to stdout otherwise.
+
 A row present in the baseline but missing from the fresh artifact fails:
 renaming or deleting a benchmark must refresh the baseline deliberately,
 never silently drop coverage.  Fresh-only rows (new benchmarks) pass with
@@ -146,11 +168,25 @@ def _rows(doc: Dict) -> Dict[str, Dict]:
 
 
 def compare(fresh: Dict, baseline: Dict, tolerance: float
-            ) -> Tuple[List[str], List[str]]:
-    """Returns (failures, notes)."""
+            ) -> Tuple[List[str], List[str], List[Dict]]:
+    """Returns (failures, notes, records).
+
+    ``records`` is one dict per gated check — ``{"name", "pim_mode",
+    "gate", "baseline", "fresh", "status", "detail"}`` with ``status``
+    in {"pass", "FAIL"} — the structured form behind both the stdout
+    lines and the ``$GITHUB_STEP_SUMMARY`` table
+    (:func:`write_step_summary`).  Ungated (descriptive) rows don't
+    produce records.
+    """
     failures: List[str] = []
     notes: List[str] = []
+    records: List[Dict] = []
     f_rows, b_rows = _rows(fresh), _rows(baseline)
+
+    def rec(status, name, pim_mode, gate, bv, fv, detail=""):
+        records.append({"name": name, "pim_mode": pim_mode, "gate": gate,
+                        "baseline": bv, "fresh": fv, "status": status,
+                        "detail": detail})
 
     for name, b in sorted(b_rows.items()):
         key = (b.get("suite", ""), name, b.get("pim_mode", ""))
@@ -159,6 +195,8 @@ def compare(fresh: Dict, baseline: Dict, tolerance: float
             failures.append(f"missing row {key}: present in baseline but "
                             f"not in the fresh artifact (renames must "
                             f"refresh the baseline)")
+            rec("FAIL", name, key[2], "presence", "present", "missing",
+                "renames must refresh the baseline")
             continue
         if (f.get("suite", ""), f.get("pim_mode", "")) != (key[0], key[2]):
             failures.append(
@@ -166,6 +204,10 @@ def compare(fresh: Dict, baseline: Dict, tolerance: float
                 f"(suite={key[0]}, pim_mode={key[2]}) vs fresh "
                 f"(suite={f.get('suite', '')}, "
                 f"pim_mode={f.get('pim_mode', '')})")
+            rec("FAIL", name, key[2], "identity",
+                f"{key[0]}/{key[2]}",
+                f"{f.get('suite', '')}/{f.get('pim_mode', '')}",
+                "row changed (suite, pim_mode) identity")
             continue
         tol = float(b.get("tol", tolerance))
         floor = b.get("floor")
@@ -173,31 +215,90 @@ def compare(fresh: Dict, baseline: Dict, tolerance: float
             bv, fv = b.get(field), f.get(field)
             if bv is None:
                 continue
+            gate = (f"{field} floor {float(floor):.3g}" if floor is not None
+                    else f"{field} tol -{tol:.0%}")
             if fv is None:
                 failures.append(f"{key}: baseline has {field}={bv} but the "
                                 f"fresh row dropped the field")
+                rec("FAIL", name, key[2], gate, bv, None,
+                    "fresh row dropped the field")
             elif floor is not None:
                 if fv < float(floor):
                     failures.append(
                         f"{key}: {field} {fv:.3f} fell below the absolute "
                         f"floor {float(floor):.3f} (baseline {bv:.3f})")
-                elif fv < bv:
-                    notes.append(f"{key}: {field} {bv:.3f} -> {fv:.3f} "
-                                 f"(above floor {float(floor):.3f})")
+                    rec("FAIL", name, key[2], gate, bv, fv,
+                        "below the absolute floor")
+                else:
+                    if fv < bv:
+                        notes.append(f"{key}: {field} {bv:.3f} -> {fv:.3f} "
+                                     f"(above floor {float(floor):.3f})")
+                    rec("pass", name, key[2], gate, bv, fv)
             elif fv < (1.0 - tol) * bv:
                 failures.append(
                     f"{key}: {field} regressed {bv:.3f} -> {fv:.3f} "
                     f"({fv / bv - 1.0:+.1%}, tolerance -{tol:.0%})")
-            elif fv < bv:
-                notes.append(f"{key}: {field} {bv:.3f} -> {fv:.3f} "
-                             f"(within tolerance)")
-        if b.get("bit_exact") is True and f.get("bit_exact") is not True:
-            failures.append(f"{key}: bit_exact flipped "
-                            f"{b.get('bit_exact')} -> {f.get('bit_exact')}")
+                rec("FAIL", name, key[2], gate, bv, fv,
+                    f"regressed {fv / bv - 1.0:+.1%}")
+            else:
+                if fv < bv:
+                    notes.append(f"{key}: {field} {bv:.3f} -> {fv:.3f} "
+                                 f"(within tolerance)")
+                rec("pass", name, key[2], gate, bv, fv)
+        if b.get("bit_exact") is True:
+            if f.get("bit_exact") is not True:
+                failures.append(f"{key}: bit_exact flipped "
+                                f"{b.get('bit_exact')} -> "
+                                f"{f.get('bit_exact')}")
+                rec("FAIL", name, key[2], "bit_exact", True,
+                    f.get("bit_exact"), "correctness regression")
+            else:
+                rec("pass", name, key[2], "bit_exact", True, True)
     for name in sorted(set(f_rows) - set(b_rows)):
         notes.append(f"new row {name!r} (not in baseline; refresh to gate "
                      f"it)")
-    return failures, notes
+    return failures, notes, records
+
+
+def write_step_summary(records: List[Dict], fresh: Dict, baseline: Dict,
+                       n_failures: int, out=None) -> None:
+    """Render the gated-row table as GitHub-flavored markdown.
+
+    Appends to ``$GITHUB_STEP_SUMMARY`` when set (the CI run page shows
+    it without downloading the ``BENCH_partitionpim`` artifact), else
+    prints to ``out``/stdout so local runs see the same table.
+    """
+    def fmt(v):
+        if isinstance(v, bool) or v is None:
+            return str(v)
+        if isinstance(v, float):
+            return f"{v:.3f}"
+        return str(v)
+
+    lines = ["## Benchmark gate: "
+             + (f"FAIL ({n_failures} regression(s))" if n_failures
+                else "pass"),
+             "",
+             f"baseline commit "
+             f"`{baseline.get('_meta', {}).get('commit')}` vs fresh "
+             f"`{fresh.get('_meta', {}).get('commit')}` — "
+             f"{len(records)} gated check(s)",
+             "",
+             "| status | row | pim_mode | gate | baseline | fresh | |",
+             "|---|---|---|---|---|---|---|"]
+    # failures first so the run page leads with what broke
+    for r in sorted(records, key=lambda r: r["status"] != "FAIL"):
+        mark = "❌" if r["status"] == "FAIL" else "✅"
+        lines.append(f"| {mark} | `{r['name']}` | {r['pim_mode']} | "
+                     f"{r['gate']} | {fmt(r['baseline'])} | "
+                     f"{fmt(r['fresh'])} | {r['detail']} |")
+    text = "\n".join(lines) + "\n"
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if path:
+        with open(path, "a") as fh:
+            fh.write(text)
+    else:
+        print(text, file=out)
 
 
 def main(argv=None) -> int:
@@ -226,7 +327,8 @@ def main(argv=None) -> int:
         fresh = json.load(f)
     with open(args.baseline) as f:
         baseline = json.load(f)
-    failures, notes = compare(fresh, baseline, args.tolerance)
+    failures, notes, records = compare(fresh, baseline, args.tolerance)
+    write_step_summary(records, fresh, baseline, len(failures))
     for n in notes:
         print(f"note: {n}")
     if failures:

@@ -52,7 +52,14 @@ the fleet clock (replica={1,2,4} throughput scaling over 8-device
 slices, a prefix-affinity vs round-robin dispatch hit-rate A/B on a
 multi-tenant trace, and a mid-trace replica-kill drill that must finish
 with zero lost requests and tokens bit-identical to a single-scheduler
-oracle); ``--suite autotune`` runs the partition autotuner's race per
+oracle); ``--suite spec-decode`` A/Bs self-speculative decoding (quant
+drafts, ``draft_k=4``, expensive-mode batched verify) against plain
+decode per verify mode {xla, quant_tp, pim_sim}: tokens must stay
+bit-identical in every mode (greedy acceptance is exact for any
+draft/verify pairing) and the pim_sim verify must clear the gated 1.3x
+tok/s floor — the crossbar simulator's per-gate overhead dominates its
+row math, so one k-wide verify step costs about one single-row step;
+``--suite autotune`` runs the partition autotuner's race per
 (shape, pim_mode) grid point — the tuned pick must never lose to the
 hardcoded default (``picked_vs_default`` gated at floor 1.0), the tuned
 GEMM must stay bit-exact, the tuning-table JSON roundtrip must preserve
@@ -839,6 +846,138 @@ def serving_replica() -> List[Row]:
     return rows
 
 
+def spec_decode() -> List[Row]:
+    """Self-speculative decode vs plain decode, per verify mode.
+
+    A decode-heavy trace (short prompts, long generation budgets) runs
+    twice per verify mode — plain decode and speculative
+    (``draft_mode="quant"``, ``draft_k=4``) — through the paged pool.
+    Both runs are warmed first (prompt bucket, the ``(B, 1)`` plain and
+    draft steps, and the ``(B, k)`` verify step all compile outside the
+    measured window; metrics reset), then the measured trace must hold
+    decode at **one** trace per jit (``decode_traces == 1`` and
+    ``draft_traces == 1`` — acceptance-length churn never recompiles).
+    Rows per mode:
+
+    - ``tokens_bit_exact`` (gated): the speculative run's generations
+      must match plain decode token for token.  Greedy acceptance makes
+      this hold for *any* draft/verify pairing — the xla row pairs a
+      float verify with an integer draft precisely so acceptance is
+      imperfect and the exactness claim is non-trivial;
+    - ``speculative_vs_plain`` (ratio): measured tok/s speedup.  Only
+      the ``pim_sim`` row carries the acceptance-criterion floor 1.3 —
+      the simulator's per-gate interpreter overhead dominates its
+      vectorized row math, so verifying ``k`` rows costs about one
+      single-row step and ~``k`` tokens ride one expensive step plus
+      ``k - 1`` cheap quant drafts (the same latency-hiding batching
+      PartitionPIM's partitions buy in hardware).  The xla and quant_tp
+      rows are descriptive (floor 0.05 = "ran at all"): their per-step
+      cost already scales with the verified width, so the k - 1 extra
+      draft steps make speculation a net loss at smoke scale on CPU —
+      the rows document that speculation is a *pim_sim* (amortizable
+      verify) optimization, not a universal one;
+
+    plus one descriptive ``mean_accept_len`` row (pim_sim run's
+    acceptance histogram; quant drafts against an integer verify mode
+    agree on nearly every logit, so it sits near ``draft_k``).
+    """
+    import contextlib
+
+    import jax
+    import numpy as np
+
+    import repro.configs as configs
+    from repro.dist import context as dctx
+    from repro.launch.mesh import make_mesh
+    from repro.models import model_lib as M
+    from repro.serving import (Scheduler, ServingConfig, ServingMetrics,
+                               synthetic_requests)
+
+    # xla/quant_tp: heavy enough that step compute dominates dispatch and
+    # d_model/d_ff divide the 8-rank mesh (same scaling as the chunked
+    # suite); pim_sim: the bit-accurate crossbar interpreter needs the
+    # tiny mode-suite dims to decode whole traces in seconds
+    heavy = configs.get("qwen1.5-0.5b").smoke().scaled(
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+        d_ff=1024, vocab_size=512, pad_vocab_multiple=8, loss_chunk=64,
+        max_seq_len=64)
+    tiny = configs.get("qwen1.5-0.5b").smoke().scaled(
+        n_layers=1, pattern=("ad",), d_model=32, n_heads=2, n_kv_heads=2,
+        head_dim=16, d_ff=64, vocab_size=64, pad_vocab_multiple=8,
+        loss_chunk=8, max_seq_len=48)
+    draft_mode, k, batch, bs = "quant", 4, 4, 8
+    rows: List[Row] = []
+    accept = None
+    for mode, floor in (("xla", 0.05), ("quant_tp", 0.05),
+                        ("pim_sim", 1.3)):
+        base = tiny if mode == "pim_sim" else heavy
+        cfg = base.scaled(pim_mode=mode)
+        gen = 12 if mode == "pim_sim" else 16
+        n_req = 8
+        trace = dict(vocab_size=cfg.vocab_size, prompt_lens=[4, 6, 8],
+                     max_new_tokens=gen, rate=0.0, seed=11)
+        ctx = (dctx.use_mesh(make_mesh((8,), ("model",)))
+               if mode == "quant_tp" else contextlib.nullcontext())
+        with ctx:
+            params = M.init_params(cfg, jax.random.PRNGKey(0))
+            outs, tps, summaries = {}, {}, {}
+            for spec_on in (False, True):
+                scfg = ServingConfig(max_batch=batch, prompt_bucket=bs,
+                                     paged=True, block_size=bs,
+                                     speculative=spec_on,
+                                     draft_mode=draft_mode, draft_k=k)
+                sched = Scheduler(params, cfg, scfg)
+                for r in synthetic_requests(batch, start_time=sched.clock(),
+                                            **dict(trace, max_new_tokens=2,
+                                                   seed=99)):
+                    sched.submit_request(r)
+                sched.run()
+                sched.metrics = ServingMetrics()
+                reqs = synthetic_requests(n_req, start_time=sched.clock(),
+                                          **trace)
+                for r in reqs:
+                    sched.submit_request(r)
+                res = sched.run()
+                assert sched.decode_traces == 1, \
+                    f"{mode} spec={spec_on} decode recompiled"
+                if spec_on:
+                    assert sched.draft_traces == 1, \
+                        f"{mode} draft step recompiled"
+                outs[spec_on] = [res[r.rid] for r in reqs]
+                summaries[spec_on] = sched.metrics.summary()
+                tps[spec_on] = summaries[spec_on]["tokens_per_s"]
+        same = all(np.array_equal(a, b)
+                   for a, b in zip(outs[False], outs[True]))
+        assert same, f"speculative decode changed tokens under {mode}"
+        mesh_s = "model=8" if mode == "quant_tp" else "1"
+        ratio = tps[True] / tps[False]
+        s = summaries[True]
+        rows.append((f"spec/{mode}_tokens_bit_exact", 0.0,
+                     f"{n_req} requests bit-identical to plain {mode} "
+                     f"decode (draft {draft_mode}, k={k}; accept "
+                     f"{s['accepted_tokens']}/{s['verified_tokens']})",
+                     {"pim_mode": mode, "mesh": mesh_s,
+                      "bit_exact": bool(same)}))
+        rows.append((f"spec/{mode}_speculative_vs_plain",
+                     0.0,
+                     f"{tps[True]:.1f} vs {tps[False]:.1f} tok/s = "
+                     f"{ratio:.2f}x (draft {draft_mode}, k={k}, mean "
+                     f"accept len {s['mean_accept_len']:.2f}"
+                     + ("; acceptance floor 1.3x)" if mode == "pim_sim"
+                        else "; descriptive)"),
+                     {"pim_mode": mode, "mesh": mesh_s,
+                      "ratio": round(ratio, 3), "floor": floor}))
+        if mode == "pim_sim":
+            accept = s
+    hist = ", ".join(f"{n}: {c}" for n, c in
+                     sorted(accept["accept_len_hist"].items()))
+    rows.append(("spec/mean_accept_len", 0.0,
+                 f"{accept['mean_accept_len']:.2f} of k={k} on the pim_sim "
+                 f"run ({accept['accepted_per_step']:.2f} tok/verify step; "
+                 f"hist {{{hist}}}; descriptive, no gate)"))
+    return rows
+
+
 def tp_quant_decode() -> List[Row]:
     """Tensor-parallel quant_tp decode vs single-rank quant, model={1,2,4,8}.
 
@@ -1038,11 +1177,12 @@ SUITES = {
     "prefix": [serving_prefix],
     "prefill-chunked": [serving_chunked],
     "replica": [serving_replica],
+    "spec-decode": [spec_decode],
     "tp": [tp_quant_decode],
     "autotune": [autotune_suite],
     "all": TABLES + [serving_throughput, serving_paged, serving_prefix,
-                     serving_chunked, serving_replica, tp_quant_decode,
-                     autotune_suite],
+                     serving_chunked, serving_replica, spec_decode,
+                     tp_quant_decode, autotune_suite],
 }
 
 
@@ -1084,11 +1224,14 @@ def main(argv=None) -> None:
                          "PIM mode; prefill-chunked: chunked+packed prefill "
                          "p99-TPOT A/B per PIM mode; "
                          "replica: multi-replica router scaling/"
-                         "affinity/kill-drill; tp: tensor-parallel quant_tp "
+                         "affinity/kill-drill; spec-decode: self-"
+                         "speculative vs plain decode A/B per verify "
+                         "mode; tp: tensor-parallel quant_tp "
                          "vs single-rank quant; all: everything")
     args = ap.parse_args(argv)
 
-    if args.suite in ("tp", "prefix", "prefill-chunked", "replica", "all"):
+    if args.suite in ("tp", "prefix", "prefill-chunked", "replica",
+                      "spec-decode", "all"):
         # these tables shard/slice an 8-device topology: force it before
         # anything initializes jax (no-op if already forced)
         from repro.xla_flags import ensure_host_device_count

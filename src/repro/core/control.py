@@ -26,7 +26,7 @@ message of the design's fixed length.
 from __future__ import annotations
 
 import math
-from typing import List, Sequence, Tuple
+from typing import List
 
 from repro.core.models import gate_direction, gate_distance, validate
 from repro.core.operation import (
@@ -36,14 +36,9 @@ from repro.core.operation import (
     PartitionConfig,
     tight_selects,
 )
-from repro.core.periphery import (
-    PartitionOpcode,
-    minimal_range_generator,
-    op_opcodes,
-    sections_from_selects,
-    simulate_voltages,
-    standard_opcode_generator,
-)
+from repro.core.periphery import (PartitionOpcode, minimal_range_generator,
+                                  op_opcodes, simulate_voltages,
+                                  standard_opcode_generator)
 
 __all__ = [
     "message_bits",

@@ -15,17 +15,9 @@ MultPIM's unsupported operations with compatible alternatives (§5, fn. 4/5).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
 
-from repro.core.operation import (
-    GateOp,
-    InitOp,
-    LegalityError,
-    Operation,
-    PartitionConfig,
-    gate_interval,
-    op_intervals,
-)
+from repro.core.operation import (GateOp, InitOp, LegalityError, Operation,
+                                  PartitionConfig, op_intervals)
 
 __all__ = ["MODELS", "validate", "is_legal", "gate_direction", "gate_distance"]
 

@@ -16,7 +16,7 @@ the standard/minimal models.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 __all__ = [
     "PartitionConfig",

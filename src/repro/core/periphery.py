@@ -28,10 +28,9 @@ half-gates along a section forms one valid gate.  This module implements:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 from repro.core.gates import GATE_DEFS
-from repro.core.models import gate_direction, gate_distance
 from repro.core.operation import (
     GateOp,
     LegalityError,

@@ -24,7 +24,7 @@ from typing import Dict, Iterable, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.core import control as control_mod
-from repro.core.gates import GATE_CODES, GATE_DEFS
+from repro.core.gates import GATE_CODES
 from repro.core.models import validate as validate_op
 from repro.core.operation import (
     GateOp,

@@ -1,1 +1,3 @@
 from repro.data.pipeline import AudioStub, SyntheticLM, VisionStub
+
+__all__ = ["AudioStub", "SyntheticLM", "VisionStub"]

@@ -11,7 +11,7 @@ token-bigram chain over the vocabulary with periodic copy spans.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

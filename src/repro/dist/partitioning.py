@@ -20,7 +20,7 @@ Placement rules (see ``repro.dist.__doc__`` for the axis conventions):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec

@@ -1,1 +1,4 @@
-from repro.kernels.crossbar_exec.ops import crossbar_exec, crossbar_exec_ref, run_program
+from repro.kernels.crossbar_exec.ops import (crossbar_exec, crossbar_exec_ref,
+                                              run_program)
+
+__all__ = ["crossbar_exec", "crossbar_exec_ref", "run_program"]

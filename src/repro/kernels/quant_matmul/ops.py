@@ -1,7 +1,6 @@
 """Quantized linear op: symmetric per-channel int8, PIM-faithful rounding."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.quant_matmul.quant_matmul import quant_matmul_int

@@ -15,12 +15,10 @@ Usage:  PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun]
 from __future__ import annotations
 
 import argparse
-import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-import numpy as np
 
 import repro.configs as configs
 from repro.models import model_lib as M

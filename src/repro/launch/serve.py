@@ -21,6 +21,11 @@ decode TPOT jitter stays bounded under long-prompt bursts), and
 ``--packed-prefill`` batches short queued prompts into one segment-masked
 prefill call; the ``[chunked]`` line echoes p99 TPOT and chunk/pack
 counters, and generations stay bit-identical to whole prefill.
+``--speculative`` turns on self-speculative decoding: ``--draft-mode``
+(default ``quant``) drafts ``--draft-k - 1`` tokens per round and the
+serving mode verifies the whole run in one batched step; greedy
+acceptance keeps generations bit-identical to plain decode in every
+mode, and the ``[spec]`` line echoes acceptance counters.
 
 **Multi-replica router** (``--replicas N``): instead of one scheduler,
 ``N`` independent engines — each its own device slice, mesh, KV pool,
@@ -82,7 +87,9 @@ def serve_trace(params, cfg, requests, *, max_batch: int, prompt_bucket: int,
                 num_blocks=None, prefix_cache: bool = False,
                 queue_policy: str = "fifo", autotune: bool = False,
                 autotune_trials: int = 1, prefill_chunk=None,
-                step_token_budget=None, packed_prefill: bool = False):
+                step_token_budget=None, packed_prefill: bool = False,
+                speculative: bool = False, draft_mode: str = "quant",
+                draft_k: int = 4):
     """Run a request trace through the scheduler; returns (results, summary)."""
     scfg = ServingConfig(max_batch=max_batch, prompt_bucket=prompt_bucket,
                          paged=paged, block_size=block_size,
@@ -91,7 +98,9 @@ def serve_trace(params, cfg, requests, *, max_batch: int, prompt_bucket: int,
                          autotune_trials=autotune_trials,
                          prefill_chunk=prefill_chunk,
                          step_token_budget=step_token_budget,
-                         packed_prefill=packed_prefill)
+                         packed_prefill=packed_prefill,
+                         speculative=speculative, draft_mode=draft_mode,
+                         draft_k=draft_k)
     sched = Scheduler(params, cfg, scfg, mesh=mesh)
     for req in requests:
         sched.submit_request(req)
@@ -177,6 +186,19 @@ def main():
     ap.add_argument("--packed-prefill", action="store_true",
                     help="pack bursts of short queued prompts into one "
                          "segment-masked prefill call (implies --paged)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative decode: --draft-mode drafts "
+                         "draft_k-1 tokens per round, the serving mode "
+                         "verifies the run in one batched step; greedy "
+                         "acceptance keeps outputs bit-identical")
+    ap.add_argument("--draft-mode", choices=list(engine.MODES),
+                    default="quant",
+                    help="cheap lowering for the draft pass (share the "
+                         "verify mode's per-row quantization — quant for "
+                         "pim_sim/quant_tp — for ~100%% acceptance)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="verify width: tokens checked per verify step "
+                         "(draft_k-1 drafted; 1 is plain decode)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend one fixed N-token system prompt to every "
                          "synthetic request (the prefix-cache workload)")
@@ -249,7 +271,9 @@ def main():
                 autotune_trials=args.autotune_trials,
                 prefill_chunk=args.prefill_chunk,
                 step_token_budget=args.step_token_budget,
-                packed_prefill=args.packed_prefill)
+                packed_prefill=args.packed_prefill,
+                speculative=args.speculative, draft_mode=args.draft_mode,
+                draft_k=args.draft_k)
             rcfg = RouterConfig(n_replicas=args.replicas,
                                 policy=args.router_policy,
                                 model_parallel=args.model_parallel)
@@ -266,7 +290,9 @@ def main():
                 autotune_trials=args.autotune_trials,
                 prefill_chunk=args.prefill_chunk,
                 step_token_budget=args.step_token_budget,
-                packed_prefill=args.packed_prefill)
+                packed_prefill=args.packed_prefill,
+                speculative=args.speculative, draft_mode=args.draft_mode,
+                draft_k=args.draft_k)
         print(f"served {summary['n_finished']}/{summary['n_requests']} "
               f"requests, {summary['total_tokens']} tokens @ "
               f"{summary['tokens_per_s']:.0f} tok/s "
@@ -308,6 +334,13 @@ def main():
                   f"{summary['replica_restarts']} restarts | "
                   f"queue {args.queue_policy}, p50 wait "
                   f"{summary['p50_queue_wait_s'] * 1e3:.0f}ms")
+        if args.speculative and summary.get("spec_rounds", 0):
+            print(f"[spec] draft {args.draft_mode} k={args.draft_k}: "
+                  f"{summary['accepted_tokens']}/"
+                  f"{summary['verified_tokens']} verified tokens accepted "
+                  f"({summary['drafted_tokens']} drafted) | "
+                  f"mean accept len {summary['mean_accept_len']:.2f} | "
+                  f"{summary['accepted_per_step']:.2f} tok/verify step")
         if args.pim_mode == "pim_sim":
             info = engine.cache_info()
             print(f"[pim] crossbar uploads {info.exec_uploads}, "

@@ -12,16 +12,12 @@ from __future__ import annotations
 
 import argparse
 import contextlib
-import dataclasses
 import functools
 import json
-import os
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 import repro.configs as configs
 from repro.data.pipeline import AudioStub, SyntheticLM, VisionStub

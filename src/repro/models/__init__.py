@@ -1,2 +1,4 @@
 from repro.models.config import ModelConfig, SHAPES, ShapeSpec
 from repro.models import model as model_lib
+
+__all__ = ["ModelConfig", "SHAPES", "ShapeSpec", "model_lib"]

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -182,18 +182,25 @@ def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
 def decode_attention(q, k_cache, v_cache, cache_len=None, *,
                      window: Optional[int] = None,
                      valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """Single-step attention: q (B, 1, H, D) over cache (B, S, Hkv, D).
+    """Decode-step attention: q (B, Sq, H, D) over cache (B, S, Hkv, D).
 
     The key mask comes from ``cache_len`` (prefix semantics: indices below
     it are live, optionally window-clipped) or, for non-contiguous cache
     layouts, from an explicit ``valid`` (B, S) boolean mask — the paged
     pool's gather path computes per-logical-index validity (ring wraparound,
     unallocated sentinel blocks) that a single prefix length can't express.
+
+    ``Sq`` is 1 for the plain decode step.  A speculative verify run feeds
+    ``Sq > 1`` consecutive positions with a per-query ``valid`` (B, Sq, S)
+    mask — query ``i`` may only see cache rows at positions ``<= pos + i``,
+    which keeps the run causal and masks the rows the run itself just wrote
+    for *later* queries.  The ``Sq = 1`` trace is unchanged by the
+    generalization (same reshapes, same einsums, same broadcast mask).
     """
-    b, _, h, d = q.shape
+    b, sq, h, d = q.shape
     _, s, hkv, _ = k_cache.shape
     n_rep = h // hkv
-    qg = q.reshape(b, 1, hkv, n_rep, d)
+    qg = q.reshape(b, sq, hkv, n_rep, d)
     scores = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
                         preferred_element_type=jnp.float32)
     scores = scores / math.sqrt(d)
@@ -204,12 +211,15 @@ def decode_attention(q, k_cache, v_cache, cache_len=None, *,
         mask = pos[None, :] < cache_len  # (B?, S) — cache_len scalar or (B,)
         if window is not None:
             mask = mask & (pos[None, :] > cache_len - 1 - window)
-    mask = jnp.broadcast_to(mask, (b, s))
-    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    if mask.ndim == 3:          # per-query validity (B, Sq, S)
+        mask5 = mask[:, None, None, :, :]
+    else:
+        mask5 = jnp.broadcast_to(mask, (b, s))[:, None, None, None, :]
+    scores = jnp.where(mask5, scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
     out = jnp.einsum("bhgqs,bshd->bqhgd", p, v_cache,
                      preferred_element_type=jnp.float32)
-    return out.reshape(b, 1, h, d).astype(q.dtype)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
 
 
 def cross_attention(q, k, v) -> jnp.ndarray:

@@ -9,14 +9,14 @@ from __future__ import annotations
 
 import contextlib
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.dist import context as dctx
 from repro.models import attention as attn
-from repro.models.config import ModelConfig, ShapeSpec
+from repro.models.config import ModelConfig
 from repro.models.layers import (Spec, activation, apply_rope, embed_lookup,
                                  linear, materialize, rms_norm, unembed)
 from repro.models.moe import moe_ffn
@@ -231,20 +231,40 @@ def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
         bs_blk = cache["k"].shape[1]
         lcap = block_tables.shape[1] * bs_blk
         r = jnp.arange(lcap)
-        if cfg.sliding_window:
+        if s > 1:
+            # Speculative verify run: token i of the run is written at
+            # logical row pos+i, and query i's mask stops at its own row —
+            # (B, s, lcap) per-query validity.  Rows past the slot's block
+            # reservation hit sentinel table entries (trash block); rows at
+            # or past lcap itself are routed to the trash block explicitly,
+            # because the clamped gather would otherwise corrupt the slot's
+            # last real block.  Sliding-window rings are rejected here:
+            # rolling back a rejected draft would need ring rows the run's
+            # own writes already destroyed.
+            if cfg.sliding_window:
+                raise ValueError("multi-position decode (speculative verify)"
+                                 " does not support sliding_window")
+            widx = pos[:, None] + jnp.arange(s)            # (B, s)
+            valid = r[None, None, :] <= widx[:, :, None]   # (B, s, lcap)
+            blk = block_tables[jnp.arange(b)[:, None],
+                               jnp.minimum(widx, lcap - 1) // bs_blk]
+            blk = jnp.where(widx < lcap, blk, 0)
+        elif cfg.sliding_window:
             ring = cfg.window_ring_blocks(bs_blk) * bs_blk
             widx = pos % ring
             _, in_ring = ring_slot_positions(pos[:, None], r[None, :],
                                              ring, cfg.sliding_window)
             valid = (r[None, :] < ring) & in_ring
+            blk = block_tables[jnp.arange(b), widx // bs_blk]
         else:
             widx = pos
             valid = r[None, :] <= pos[:, None]
-        blk = block_tables[jnp.arange(b), widx // bs_blk]
+            blk = block_tables[jnp.arange(b), widx // bs_blk]
         off = widx % bs_blk
 
         def put(c, new):
-            return c.at[blk, off].set(new[:, 0].astype(c.dtype))
+            new = new if s > 1 else new[:, 0]
+            return c.at[blk, off].set(new.astype(c.dtype))
 
         def gather(c):
             return c[block_tables].reshape((b, lcap) + c.shape[2:])
@@ -266,16 +286,35 @@ def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
         out = attn.decode_attention(q, k_full, v_full, valid=valid)
     elif mode == "decode":
         cap = cache["k"].shape[1]
-        idx = pos % cap
         per_slot = jnp.ndim(pos) == 1  # continuous batching: (B,) positions
 
-        if per_slot:
+        if s > 1:
+            # Speculative verify run over the contiguous pool: rows land at
+            # their *unwrapped* absolute indices, with out-of-capacity
+            # writes dropped — wrapping (the `% cap` ring below) would let a
+            # past-the-budget garbage row overwrite live early rows that
+            # rollback still needs.
+            if not per_slot:
+                raise ValueError("multi-position decode needs per-slot "
+                                 "(B,) positions")
+            if cfg.sliding_window:
+                raise ValueError("multi-position decode (speculative verify)"
+                                 " does not support sliding_window")
+            idx = pos[:, None] + jnp.arange(s)             # (B, s)
+            bidx = jnp.arange(b)[:, None]
+
+            def put(c, new):
+                return c.at[bidx, idx].set(new.astype(c.dtype), mode="drop")
+        elif per_slot:
             # each slot writes its token at its own cache index
+            idx = pos % cap
             bidx = jnp.arange(b)
 
             def put(c, new):
                 return c.at[bidx, idx].set(new[:, 0].astype(c.dtype))
         else:
+            idx = pos % cap
+
             def put(c, new):
                 start = (0, idx) + (0,) * (new.ndim - 2)
                 return jax.lax.dynamic_update_slice(c, new.astype(c.dtype),
@@ -293,10 +332,14 @@ def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
             kc, vc = put(cache["k"], k), put(cache["v"], v)
             k_full, v_full = kc, vc
             new_cache = {"k": kc, "v": vc}
-        cache_len = jnp.minimum(pos + 1, cap)
-        if per_slot:
-            cache_len = cache_len[:, None]  # (B, 1): per-slot mask rows
-        out = attn.decode_attention(q, k_full, v_full, cache_len)
+        if s > 1:
+            valid = jnp.arange(cap)[None, None, :] <= idx[:, :, None]
+            out = attn.decode_attention(q, k_full, v_full, valid=valid)
+        else:
+            cache_len = jnp.minimum(pos + 1, cap)
+            if per_slot:
+                cache_len = cache_len[:, None]  # (B, 1): per-slot mask rows
+            out = attn.decode_attention(q, k_full, v_full, cache_len)
     else:
         window = cfg.sliding_window if causal else None
         attn_fn = attn.flash_attention if cfg.flash_attention \
@@ -770,6 +813,56 @@ def decode_step_slots(params, tokens, pos, active, caches, cfg: ModelConfig,
         next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         next_tok = jnp.where(active[:, None], next_tok, 0)
         return next_tok, logits, new_caches
+
+
+def decode_run_slots(params, tokens, pos, active, caches, cfg: ModelConfig,
+                     block_tables=None):
+    """Verify a run of ``S`` candidate tokens per slot in one decode step.
+
+    The speculative-decoding verify pass: ``tokens`` (B, S) int32 holds,
+    per slot, the current token followed by ``S - 1`` drafted tokens;
+    ``pos`` (B,) int32 is the absolute position of ``tokens[:, 0]``.
+    Token ``i`` is fed at position ``pos + i``, its KV row written at that
+    logical index (overwriting whatever the drafting pass left there), and
+    its greedy continuation read out — the returned ``verify_tok`` (B, S)
+    int32 is ``argmax(logits[:, i])`` for every ``i``.  The caller accepts
+    the longest prefix where ``verify_tok[:, i] == tokens[:, i + 1]``
+    (pure integer comparison; greedy decode makes acceptance exact) and
+    rewinds ``pos`` past the rejected tail — the rejected rows hold
+    garbage KV, but every mask in this stack is position-gated
+    (``row <= query pos``), so a garbage row is always overwritten by the
+    next run before any query can see it.
+
+    Bit-exactness contract: with ``S = 1`` this is ``decode_step_slots``;
+    for any ``S``, row ``i``'s hidden state equals the plain decode step's
+    at the same position with the same fed prefix, because every linear
+    lowering in the engine quantizes per activation row and the unembed
+    below runs one (B, d) matmul per position (same reduction order as the
+    single-token step — a batched (B*S, d) unembed would pick a different
+    one).  Shapes are fixed at (B, S), so acceptance-length churn never
+    retraces.  Not supported: sliding-window rings (rollback would need
+    rows the ring already overwrote), recurrent blocks and MoE routing
+    (state/capacity couple positions; the scheduler gates these).
+    """
+    with _pim_ctx(cfg):
+        x = _embed_in(params, tokens, cfg)
+        run = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        x, new_caches = _decoder_stack(params, x, cfg,
+                                       positions=pos[:, None] + run[None, :],
+                                       mode="decode", caches=caches, pos=pos,
+                                       block_tables=block_tables)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        table = _unembed_table(params, cfg)
+        # one (B, d) unembed per run position: the prefill_packed precedent
+        # — a (B*S, d) matmul picks a different reduction order than the
+        # (B, d) rows the plain decode step runs, and bit-exactness vs
+        # non-speculative decode is the verify pass's whole contract
+        logits = jnp.stack([unembed(x[:, i], table)
+                            for i in range(tokens.shape[1])],
+                           axis=1).astype(jnp.float32)
+        verify_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        verify_tok = jnp.where(active[:, None], verify_tok, 0)
+        return verify_tok, logits, new_caches
 
 
 # ==========================================================================

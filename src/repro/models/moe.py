@@ -16,8 +16,7 @@ the router's other choices still serve them).
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ DESIGN.md as a deviation), followed by the same up/down projection.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

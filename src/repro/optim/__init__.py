@@ -1,1 +1,3 @@
 from repro.optim.adamw import AdamWConfig, apply_updates, cosine_schedule, init_state
+
+__all__ = ["AdamWConfig", "apply_updates", "cosine_schedule", "init_state"]

@@ -7,8 +7,7 @@ a 256-chip pod or not (DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

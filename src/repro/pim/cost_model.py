@@ -31,8 +31,6 @@ import dataclasses
 import functools
 from typing import Dict, Optional
 
-from repro.core.control import message_bits
-from repro.core.operation import PartitionConfig
 
 __all__ = ["PimDeviceParams", "GemmCost", "gemm_cost", "mult_cost"]
 

@@ -45,7 +45,21 @@ control, execution).  This module is the driving side, as one API:
   ``kernels.quant_matmul.quant_linear`` — jit yes, shard_map yes,
   grad no — and :func:`sim_linear` — jit via ``pure_callback``,
   shard_map yes, straight-through grad — respectively; they predate the
-  registry and keep their direct call sites in ``models.layers``.)
+  registry and keep their direct call sites in ``models.layers``.
+
+  Every non-"xla" lowering quantizes activations **per row**, which makes
+  a batched multi-position decode step bit-identical per row to the
+  single-position step — the invariant self-speculative decoding
+  (``serving.speculative``) turns into throughput: a cheap mode drafts,
+  an expensive mode verifies all ``k`` drafts in one step, and greedy
+  acceptance is a pure integer token comparison.  Draft and verify must
+  share that per-row quantization family ("quant"/"quant_tp"/"pim_sim"
+  agree bit-for-bit; "xla" floats differ) for acceptance to stay ~100% —
+  any pairing is still *correct* (rejections re-decode exactly), just
+  slower.  :func:`draft_ctx` namespaces the drafting pass's
+  :class:`ExecutionSession` pool ("draft") so its uploads reuse the
+  compiled-artifact cache but can never LRU-evict the verify path's
+  resident crossbar state.)
 * :class:`ExecutionSession` / :func:`session_for` — persistent execution:
   crossbar state stays resident across ``execute`` calls, keyed per
   (geometry, weight) — a crossbar array in real PIM *is* a weight matrix —
@@ -110,6 +124,8 @@ __all__ = [
     "mode",
     "current_mode",
     "resolve_mode",
+    "draft_ctx",
+    "current_session_ns",
 ]
 
 
@@ -159,6 +175,54 @@ def resolve_mode(override: Optional[str] = None) -> str:
     if override is not None:
         return _check_mode(override)
     return current_mode()
+
+
+class _NsStack(threading.local):
+    def __init__(self):
+        self.frames = []
+
+
+_ns_stack = _NsStack()
+
+
+@contextlib.contextmanager
+def draft_ctx(name: Optional[str] = None) -> Iterator[Optional[str]]:
+    """Trace context for a speculative *drafting* pass.
+
+    Drafting runs a second, cheaper lowering (e.g. ``"quant"``) next to the
+    verify path's expensive one (``"pim_sim"``) in the same process.  Both
+    must share the compiled-artifact cache (gate programs are keyed on
+    shape/bits/model, not on who asked), but they must *not* share
+    ``ExecutionSession`` resident state: the pools are LRU-bounded, and a
+    drafting pass that cycles weights through a verify session would evict
+    the verify path's resident crossbars — turning every verify step back
+    into cold uploads and silently erasing the speedup speculation exists
+    to deliver.  Inside this context, ``sim_linear`` (and anything else
+    that passes ``current_session_ns()`` to :func:`session_for` /
+    :func:`matmul_int`) resolves to a ``"draft"``-namespaced session pool:
+    same artifacts, separate resident state.  The namespace is read at
+    **trace** time (like :func:`mode`) and baked into the host callback,
+    so it holds when the jitted draft step later executes.
+
+    ``name`` optionally selects the draft's lowering mode as well —
+    ``draft_ctx("quant")`` is ``mode("quant")`` plus the namespace.
+    Re-entrant and exception-safe; thread-local like the mode stack.
+    """
+    _ns_stack.frames.append("draft")
+    try:
+        if name is None:
+            yield None
+        else:
+            with mode(name):
+                yield name
+    finally:
+        _ns_stack.frames.pop()
+
+
+def current_session_ns() -> str:
+    """``"draft"`` inside :func:`draft_ctx`, else ``""`` (the verify/default
+    session namespace)."""
+    return _ns_stack.frames[-1] if _ns_stack.frames else ""
 
 
 # ==========================================================================
@@ -626,13 +690,17 @@ class ExecutionSession:
 
 def session_for(artifact: CompiledPim, *, backend: str = "scan",
                 rows_per_crossbar: int = 256,
-                max_resident: Optional[int] = None) -> ExecutionSession:
+                max_resident: Optional[int] = None,
+                namespace: str = "") -> ExecutionSession:
     """The process-wide persistent session for ``(artifact, backend,
-    rows_per_crossbar)`` — created on first use, then reused so repeated
-    GEMMs with the same artifact keep their crossbar state resident.
-    ``max_resident`` applies on creation (and raises the cap of an
-    existing session).  ``clear_cache()`` drops all pooled sessions."""
-    key = (artifact.key, backend, rows_per_crossbar)
+    rows_per_crossbar, namespace)`` — created on first use, then reused so
+    repeated GEMMs with the same artifact keep their crossbar state
+    resident.  ``max_resident`` applies on creation (and raises the cap of
+    an existing session).  ``namespace`` partitions the pool — a
+    speculative drafting pass runs under ``"draft"`` (see
+    :func:`draft_ctx`) so its uploads can never LRU-evict the verify
+    path's resident state.  ``clear_cache()`` drops all pooled sessions."""
+    key = (artifact.key, backend, rows_per_crossbar, namespace)
     with _session_lock:
         sess = _sessions.get(key)
         if sess is None:
@@ -666,7 +734,8 @@ def matmul_int(x: np.ndarray, w: np.ndarray, n_bits: int = 8, *,
                model: str = "minimal", rows_per_crossbar: int = 256,
                backend: str = "scan", accumulate: str = "carry_save",
                plan: Optional["object"] = None,
-               tune_ctx: Optional[str] = None) -> np.ndarray:
+               tune_ctx: Optional[str] = None,
+               session_ns: str = "") -> np.ndarray:
     """Compile-and-execute convenience: bit-exact integer GEMM.
 
     The compile step is cached — calling twice with the same (K, n_bits,
@@ -685,6 +754,10 @@ def matmul_int(x: np.ndarray, w: np.ndarray, n_bits: int = 8, *,
     back to the defaults above, it never triggers a search.  Every tuned
     configuration computes the same exact integer GEMM, so plans change
     speed, never results.
+
+    ``session_ns`` routes execution to a namespaced session pool (see
+    :func:`draft_ctx`): a speculative drafting pass passes ``"draft"`` so
+    its state uploads never evict the verify path's resident crossbars.
     """
     from repro.pim.matmul import max_dot_terms
 
@@ -707,8 +780,8 @@ def matmul_int(x: np.ndarray, w: np.ndarray, n_bits: int = 8, *,
         artifact = compile_matmul(xs.shape[1], n_bits, model=model,
                                   accumulate=accumulate, n_cols=n_cols)
         return session_for(artifact, backend=backend,
-                           rows_per_crossbar=rows_per_crossbar
-                           ).execute(xs, ws)
+                           rows_per_crossbar=rows_per_crossbar,
+                           namespace=session_ns).execute(xs, ws)
 
     if K <= chunk:
         return run(x, w)
@@ -723,8 +796,8 @@ def matmul_int(x: np.ndarray, w: np.ndarray, n_bits: int = 8, *,
 # jit-composable simulator linear
 # ==========================================================================
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _sim_mm(bits: int, model: str, backend: str, x, w):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _sim_mm(bits: int, model: str, backend: str, ns: str, x, w):
     out_shape = x.shape[:-1] + (w.shape[-1],)
     out_dtype = jnp.result_type(x.dtype)
     qmax = 2 ** (bits - 1) - 1
@@ -746,7 +819,7 @@ def _sim_mm(bits: int, model: str, backend: str, x, w):
         acc = matmul_int((xq + off).astype(np.uint64),
                          (wq.T + off).astype(np.uint64),
                          n_bits=bits + 1, model=model, backend=backend,
-                         tune_ctx="pim_sim")
+                         tune_ctx="pim_sim", session_ns=ns)
         acc = acc.astype(np.int64)
         corr = (off * (wq.sum(axis=0, keepdims=True) + off * xq.shape[1])
                 + off * xq.sum(axis=1, keepdims=True))
@@ -757,11 +830,11 @@ def _sim_mm(bits: int, model: str, backend: str, x, w):
     return jax.pure_callback(host, result, x, w)
 
 
-def _sim_mm_fwd(bits, model, backend, x, w):
-    return _sim_mm(bits, model, backend, x, w), (x, w)
+def _sim_mm_fwd(bits, model, backend, ns, x, w):
+    return _sim_mm(bits, model, backend, ns, x, w), (x, w)
 
 
-def _sim_mm_bwd(bits, model, backend, res, g):
+def _sim_mm_bwd(bits, model, backend, ns, res, g):
     # straight-through estimator: the forward is the quantized crossbar
     # result, the backward differentiates the ideal float matmul (standard
     # QAT practice; pure_callback itself defines no JVP/VJP)
@@ -787,5 +860,11 @@ def sim_linear(x, w, bits: int = 7, *, model: str = "minimal",
     straight-through ``custom_vjp`` (gradient of the ideal matmul), so a
     ``pim_sim`` model trains.  The host computation defaults to the pure-
     numpy backend: jax may not be re-entered from inside a host callback.
+
+    The ambient session namespace (:func:`current_session_ns`, set by
+    :func:`draft_ctx`) is read here at trace time and baked into the host
+    callback, so a jitted drafting step keeps hitting the draft-namespaced
+    session pool at execution time — the callback runs on jax's runtime
+    threads, where the trace-site thread-local would be invisible.
     """
-    return _sim_mm(bits, model, backend, x, w)
+    return _sim_mm(bits, model, backend, current_session_ns(), x, w)

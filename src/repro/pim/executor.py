@@ -26,7 +26,7 @@ int32 rows ``(gate_code, in_a, in_b, out)``; gate codes from
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,2 +1,5 @@
 from repro.runtime.fault_tolerance import (CheckpointManager, ElasticMesh,
                                            StragglerMonitor, run_with_restarts)
+
+__all__ = ["CheckpointManager", "ElasticMesh", "StragglerMonitor",
+           "run_with_restarts"]

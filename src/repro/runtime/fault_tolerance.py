@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 
@@ -50,7 +50,7 @@ class CheckpointManager:
         return path
 
     def _gc(self):
-        import shutil, os
+        import shutil
 
         steps = available_steps(self.directory)
         for s in steps[:-self.keep]:

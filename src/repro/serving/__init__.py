@@ -4,7 +4,10 @@ Single engine: a policy admission queue (``queue`` — FIFO or
 shortest-prompt-first), a slot-indexed / block-paged persistent KV-cache
 pool with prefix-trie COW sharing (``cache``), the continuous-batching
 scheduler whose jitted decode step never recompiles as requests churn
-(``scheduler``), and per-request/aggregate serving metrics
+(``scheduler``), self-speculative decoding — a cheap engine mode drafts
+``draft_k - 1`` tokens, the serving mode verifies the run in one batched
+step, greedy acceptance keeps generations bit-identical per mode
+(``speculative``) — and per-request/aggregate serving metrics
 (``metrics``).
 
 Fleet layer (``router``): N independent engines — each its own
@@ -43,6 +46,7 @@ from repro.serving.queue import (AdmissionQueue, Request, make_request,
 from repro.serving.router import (FailurePlan, FleetClock, Replica, Router,
                                   RouterConfig)
 from repro.serving.scheduler import Scheduler, ServingConfig
+from repro.serving.speculative import SpeculativeDecoder, accept_length
 
 __all__ = [
     "AdmissionQueue",
@@ -58,6 +62,8 @@ __all__ = [
     "Scheduler",
     "ServingConfig",
     "ServingMetrics",
+    "SpeculativeDecoder",
+    "accept_length",
     "make_request",
     "synthetic_requests",
 ]

@@ -71,6 +71,15 @@ class ServingMetrics:
         self.deferred_admits = 0
         self.prefill_chunks = 0     # chunked-prefill calls (first + resumed)
         self.packed_prefills = 0    # multi-segment packed prefill calls
+        # speculative decode (one on_spec_round per active slot per round):
+        # acceptance lengths (pre-clip verify agreement, 1..draft_k) feed
+        # the histogram; drafted/verified/accepted token counters give the
+        # draft hit rate and the per-verify-step yield
+        self.accept_len_samples: List[int] = []
+        self.spec_rounds = 0
+        self.drafted_tokens = 0     # tokens the cheap draft mode proposed
+        self.verified_tokens = 0    # positions the verify step checked
+        self.accepted_tokens = 0    # tokens actually committed (clipped)
         # router-level fields; the router stamps these on the merged
         # fleet metrics (router_policy None => single-scheduler summary)
         self.router_policy: Optional[str] = None
@@ -133,6 +142,19 @@ class ServingMetrics:
         """One packed prefill call served several queued prompts."""
         self.packed_prefills += 1
 
+    def on_spec_round(self, *, drafted: int, verified: int, accepted: int,
+                      accept_len: int) -> None:
+        """One slot finished one speculative draft/verify round:
+        ``drafted`` cheap-mode proposals, ``verified`` positions checked
+        in the batched verify step, ``accepted`` tokens committed (after
+        budget/EOS clipping), ``accept_len`` the raw verify agreement
+        (1..draft_k — what the acceptance histogram is over)."""
+        self.spec_rounds += 1
+        self.drafted_tokens += drafted
+        self.verified_tokens += verified
+        self.accepted_tokens += accepted
+        self.accept_len_samples.append(accept_len)
+
     # ------------------------------------------------------------------
 
     @classmethod
@@ -159,6 +181,11 @@ class ServingMetrics:
             out.deferred_admits += m.deferred_admits
             out.prefill_chunks += m.prefill_chunks
             out.packed_prefills += m.packed_prefills
+            out.accept_len_samples.extend(m.accept_len_samples)
+            out.spec_rounds += m.spec_rounds
+            out.drafted_tokens += m.drafted_tokens
+            out.verified_tokens += m.verified_tokens
+            out.accepted_tokens += m.accepted_tokens
         return out
 
     @staticmethod
@@ -236,6 +263,21 @@ class ServingMetrics:
             "deferred_admits": self.deferred_admits,
             "prefill_chunks": self.prefill_chunks,
             "packed_prefills": self.packed_prefills,
+            # speculative decode: committed tokens per verify round (the
+            # speedup driver — plain decode is exactly 1.0), the mean and
+            # histogram of raw verify agreement, and the draft/verify
+            # token totals behind them (merged() sums across replicas)
+            "spec_rounds": self.spec_rounds,
+            "drafted_tokens": self.drafted_tokens,
+            "verified_tokens": self.verified_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "accepted_per_step": (self.accepted_tokens / self.spec_rounds
+                                  if self.spec_rounds else math.nan),
+            "mean_accept_len": self._mean(
+                [float(a) for a in self.accept_len_samples]),
+            "accept_len_hist": {
+                k: self.accept_len_samples.count(k)
+                for k in sorted(set(self.accept_len_samples))},
             # prefix caching: hit rate over admitted requests, prompt
             # tokens served straight from the index (no prefill compute),
             # and the TTFT split that the warm/cold benchmark gate reads

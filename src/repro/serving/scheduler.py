@@ -180,6 +180,15 @@ class ServingConfig:
     step_token_budget: Optional[int] = None  # max prefill tokens per step
     packed_prefill: bool = False  # pack short prompts into one prefill call
     #   (implies paged)
+    speculative: bool = False   # self-speculative decode: a cheap draft
+    #   mode proposes, the serving mode verifies, greedy acceptance is
+    #   exact (see serving.speculative) — tokens stay bit-identical to
+    #   plain decode in every mode
+    draft_mode: str = "quant"   # the drafting lowering; must share the
+    #   engine's per-row integer quantization with the verify mode for
+    #   ~100% acceptance (any mode is still exact, just slower)
+    draft_k: int = 4            # verify width: tokens fed per verify step
+    #   (the draft pass proposes draft_k - 1; draft_k=1 is plain decode)
 
 
 class Scheduler:
@@ -249,6 +258,35 @@ class Scheduler:
                     f"step_token_budget={scfg.step_token_budget} below "
                     f"prefill_chunk={scfg.prefill_chunk}: no step could "
                     "ever schedule a chunk")
+        if scfg.speculative:
+            from repro.pim import engine as _engine
+
+            if scfg.draft_k < 1:
+                raise ValueError(f"draft_k={scfg.draft_k} must be >= 1")
+            if scfg.draft_mode not in _engine.MODES:
+                raise ValueError(
+                    f"unknown draft_mode {scfg.draft_mode!r}; expected one "
+                    f"of {_engine.MODES}")
+            if cfg.sliding_window:
+                # a windowed slot is a ring: the verify run's writes at
+                # pos..pos+k-1 destroy the rows k steps behind the window
+                # edge, which a rejected draft would still need — rollback
+                # is only free when rejected rows are strictly *ahead* of
+                # every live one
+                raise ValueError(
+                    f"{cfg.name}: speculative decode is incompatible with "
+                    "sliding_window (ring writes destroy rows a rejected "
+                    "draft must roll back to)")
+            if cfg.has_recurrent_blocks:
+                raise ValueError(
+                    f"{cfg.name}: speculative decode is incompatible with "
+                    "SSM/xLSTM blocks (recurrent state cannot roll back a "
+                    "rejected draft)")
+            if cfg.n_experts:
+                raise ValueError(
+                    f"{cfg.name}: speculative decode is incompatible with "
+                    "MoE (capacity dropping couples the verify run's "
+                    "positions, breaking bit-exact acceptance)")
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
@@ -301,6 +339,19 @@ class Scheduler:
         self._deferred_rids: set = set()
         self.decode_traces = 0      # python-body executions == jit retraces
 
+        # speculative decode: active only when a round can beat plain
+        # decode — draft_k=1 drafts nothing (the verify step *is* plain
+        # decode) and a draft mode equal to the verify mode would run the
+        # full-price model twice per token; both short-circuit to the
+        # plain path below, bit-identical by construction
+        self._spec: Optional["SpeculativeDecoder"] = None
+        if (scfg.speculative and scfg.draft_k > 1
+                and scfg.draft_mode != (cfg.pim_mode or "xla")):
+            from repro.serving.speculative import SpeculativeDecoder
+
+            self._spec = SpeculativeDecoder(cfg, scfg.draft_mode,
+                                            scfg.draft_k)
+
         def _step(p, tokens, pos, active, caches, tables):
             # tables is None (an empty pytree to jit) for the contiguous pool
             self.decode_traces += 1
@@ -340,6 +391,14 @@ class Scheduler:
     @property
     def n_active(self) -> int:
         return int(self.active_slots.sum())
+
+    @property
+    def draft_traces(self) -> int:
+        """Retraces of the speculative draft step (0 when speculation is
+        off or short-circuited); the verify step's retraces land in
+        ``decode_traces`` — it *is* the decode step, and tests pin both
+        to one."""
+        return self._spec.draft_traces if self._spec is not None else 0
 
     def submit(self, prompt, max_new_tokens: int, *,
                arrival_time: Optional[float] = None) -> int:
@@ -757,35 +816,88 @@ class Scheduler:
         active = self.decoding_slots
         if active.any():
             if self.pool.paged and self.pool.has_shared:
-                # copy-on-write: each active slot writes its KV at _pos
-                # this step — upgrade any shared target block to a private
-                # copy first so sibling slots / the prefix index keep
-                # their bits (cheap host check when nothing is shared)
+                # copy-on-write: each active slot writes its KV at
+                # _pos.._pos+width-1 this step (width > 1 under
+                # speculation: draft and verify both write the whole run)
+                # — upgrade any shared target block to a private copy
+                # first so sibling slots / the prefix index keep their
+                # bits (cheap host check when nothing is shared;
+                # ensure_writable no-ops past the slot's reservation)
+                width = self._spec.k if self._spec is not None else 1
                 for slot in np.flatnonzero(active):
-                    self.pool.ensure_writable(int(slot),
-                                              int(self._pos[slot]))
-            next_tok, _, new_caches = self._decode(
-                self.params, jnp.asarray(self._tokens),
-                jnp.asarray(self._pos), jnp.asarray(active),
-                self.pool.caches, self.pool.block_tables)
-            self.pool.caches = new_caches
-            toks = np.asarray(next_tok)
-            now = self.clock()
-            for slot in np.flatnonzero(active):
-                rid = int(self._slot_rid[slot])
-                tok = int(toks[slot, 0])
-                self._outputs[rid].append(tok)
-                self.metrics.on_token(rid, now)
-                emitted.append((rid, tok))
-                self._tokens[slot, 0] = tok
-                self._pos[slot] += 1
-                self._remaining[slot] -= 1
-                if (self._remaining[slot] <= 0
-                        or tok == self.scfg.eos_id):
-                    self._finish(int(slot), now)
+                    for i in range(width):
+                        self.pool.ensure_writable(int(slot),
+                                                  int(self._pos[slot]) + i)
+            if self._spec is not None:
+                self._spec_step(active, emitted)
+            else:
+                next_tok, _, new_caches = self._decode(
+                    self.params, jnp.asarray(self._tokens),
+                    jnp.asarray(self._pos), jnp.asarray(active),
+                    self.pool.caches, self.pool.block_tables)
+                self.pool.caches = new_caches
+                toks = np.asarray(next_tok)
+                now = self.clock()
+                for slot in np.flatnonzero(active):
+                    rid = int(self._slot_rid[slot])
+                    tok = int(toks[slot, 0])
+                    self._outputs[rid].append(tok)
+                    self.metrics.on_token(rid, now)
+                    emitted.append((rid, tok))
+                    self._tokens[slot, 0] = tok
+                    self._pos[slot] += 1
+                    self._remaining[slot] -= 1
+                    if (self._remaining[slot] <= 0
+                            or tok == self.scfg.eos_id):
+                        self._finish(int(slot), now)
         self.metrics.sample_queue(len(self.queue), self.n_active)
         self.metrics.sample_pool(self.pool.stats(), self._tokens_live())
         return emitted
+
+    def _spec_step(self, active: np.ndarray,
+                   emitted: List[Tuple[int, int]]) -> None:
+        """One speculative round over the decoding slots: draft ``k - 1``
+        tokens cheaply, verify the whole run in one batched step, commit
+        the longest exactly-matching prefix per slot (clipped at the
+        request's budget and EOS), and roll the rest back by simply not
+        advancing ``_pos`` past the accepted rows — the rejected rows'
+        garbage KV sits strictly ahead of every live position, where the
+        next round's writes land before any masked read can see it.  The
+        committed tokens are exactly the greedy chain plain decode would
+        emit, so generations stay bit-identical per mode.
+        """
+        from repro.serving.speculative import accept_length
+
+        spec = self._spec
+        toks_run, vt, new_caches = spec.run_round(
+            self.params, self._tokens, self._pos, active,
+            self.pool.caches, self.pool.block_tables)
+        self.pool.caches = new_caches
+        # the verify step is the decode step: surface its retrace count
+        # where every existing "exactly one trace" assertion looks
+        self.decode_traces = spec.verify_traces
+        now = self.clock()
+        for slot in np.flatnonzero(active):
+            rid = int(self._slot_rid[slot])
+            n_acc = accept_length(toks_run[slot], vt[slot])
+            emit = 0
+            for i in range(n_acc):
+                tok = int(vt[slot, i])
+                self._outputs[rid].append(tok)
+                self.metrics.on_token(rid, now)
+                emitted.append((rid, tok))
+                emit = i + 1
+                if (self._remaining[slot] - emit <= 0
+                        or tok == self.scfg.eos_id):
+                    break
+            last = int(vt[slot, emit - 1])
+            self._tokens[slot, 0] = last
+            self._pos[slot] += emit
+            self._remaining[slot] -= emit
+            self.metrics.on_spec_round(drafted=spec.k - 1, verified=spec.k,
+                                       accepted=emit, accept_len=n_acc)
+            if self._remaining[slot] <= 0 or last == self.scfg.eos_id:
+                self._finish(int(slot), now)
 
     def output(self, rid: int) -> np.ndarray:
         """Generated tokens recorded so far for ``rid`` (router harvest)."""

@@ -3,7 +3,6 @@
 Every tuned configuration must compute the identical integer GEMM — the
 tuner changes speed, never results — and the pick can never lose to the
 hardcoded default because the default is always in the timed race."""
-import dataclasses
 import json
 
 import numpy as np

@@ -3,9 +3,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import (GATE_DEFS, GateOp, InitOp, LegalityError, Operation,
+from repro.core import (GATE_DEFS, GateOp, LegalityError, Operation,
                         PartitionConfig, bounds, is_legal, message_bits,
                         op_intervals, tight_selects, validate)
 from repro.core.periphery import (minimal_range_generator, op_opcodes,

@@ -1,11 +1,10 @@
 """Crossbar executor: packing, IO helpers, gate execution semantics."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
-from repro.core import GateOp, InitOp, Operation, PartitionConfig, Program
+from repro.core import InitOp, Operation, PartitionConfig, Program
 from repro.pim import executor as ex
 
 

@@ -12,7 +12,6 @@ einsum path.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.configs as C
 from repro.dist import context as dctx

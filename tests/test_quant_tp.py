@@ -19,7 +19,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.configs as C
 from repro.dist import context as dctx
 from repro.dist import partitioning as dpart
 from repro.kernels.quant_matmul import (quant_linear, tp_quant_linear,

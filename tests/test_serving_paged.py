@@ -17,13 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.configs as configs
 from repro.dist import context as dctx
 from repro.dist import partitioning as dpart
 from repro.launch.mesh import make_host_mesh
 from repro.models import model_lib as M
-from repro.serving import (PagedCachePool, Scheduler, ServingConfig,
-                           make_request)
+from repro.serving import PagedCachePool, Scheduler, ServingConfig
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,283 @@
+"""Self-speculative decoding: exactness, rollback, and fleet drills.
+
+The contract under test (serving/speculative.py): a cheap engine mode
+drafts ``draft_k - 1`` tokens, the serving mode verifies the whole run
+in one batched ``decode_run_slots`` call, and greedy acceptance commits
+exactly the verify mode's own greedy chain — so speculative decode is
+bit-identical to plain decode for every draft/verify pairing, every
+acceptance length, and every KV layout.  Rejected draft rows are rolled
+back by *not advancing pos* (position-gated masks hide the garbage KV
+until the next round overwrites it), which the adversarial all-rejected
+and block-boundary tests exercise directly by sabotaging the draft
+step.
+"""
+import contextlib
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.dist import context as dctx
+from repro.launch.mesh import make_mesh
+from repro.models import model_lib as M
+from repro.serving import (FailurePlan, Router, RouterConfig, Scheduler,
+                           ServingConfig, accept_length, make_request)
+
+
+def _smoke():
+    return C.get("qwen1.5-0.5b").smoke()
+
+
+def _tiny(mode, **kw):
+    return C.get("qwen1.5-0.5b").smoke().scaled(
+        n_layers=1, pattern=("ad",), d_model=32, n_heads=2, n_kv_heads=2,
+        head_dim=16, d_ff=64, vocab_size=64, pad_vocab_multiple=8,
+        loss_chunk=8, max_seq_len=48, pim_mode=mode, **kw)
+
+
+def _mesh_ctx(mode):
+    if mode != "quant_tp":
+        return contextlib.nullcontext()
+    return dctx.use_mesh(make_mesh((8,), ("model",)))
+
+
+def _trace(cfg, seed=0, n=5, gen=(8, 6, 7, 5, 6)):
+    rng = np.random.default_rng(seed)
+    return [make_request(rng.integers(1, cfg.vocab_size, (3, 5, 4, 6, 4)[i]),
+                         gen[i]) for i in range(n)]
+
+
+def _run(params, cfg, scfg, reqs):
+    sched = Scheduler(params, cfg, scfg)
+    rids = [sched.submit_request(make_request(r.prompt, r.max_new_tokens))
+            for r in reqs]
+    out = sched.run()
+    return sched, [out[rid] for rid in rids]
+
+
+# ---------------------------------------------------------------------------
+# tentpole: bit-exactness in every engine mode
+# ---------------------------------------------------------------------------
+
+def test_spec_bit_exact_per_pim_mode(pim_test_mode):
+    """Speculative generations must match plain decode token for token
+    under every verify lowering (CI's PIM_TEST_MODE matrix).  The quant
+    job drafts with the *float* xla mode — drafts then disagree with the
+    integer verify chain at some positions, so the exactness claim is
+    exercised with imperfect acceptance, not just the ~100% same-family
+    case."""
+    mode = pim_test_mode
+    draft = "xla" if mode == "quant" else "quant"
+    cfg = _tiny(mode)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _trace(cfg, seed=1)
+    base = dict(max_batch=3, prompt_bucket=4, paged=True, block_size=4)
+    with _mesh_ctx(mode):
+        _, plain = _run(params, cfg, ServingConfig(**base), reqs)
+        sched, spec = _run(params, cfg,
+                           ServingConfig(speculative=True, draft_mode=draft,
+                                         draft_k=4, **base), reqs)
+    for i, (a, b) in enumerate(zip(plain, spec)):
+        assert np.array_equal(a, b), \
+            f"request {i} diverged under {mode} (draft {draft}): {a} vs {b}"
+    # pinned shapes: one (B, 1) draft trace, one (B, k) verify trace
+    assert sched.decode_traces == 1
+    assert sched.draft_traces == 1
+    s = sched.metrics.summary()
+    assert s["spec_rounds"] > 0
+    assert s["verified_tokens"] == 4 * s["spec_rounds"]
+    assert s["drafted_tokens"] == 3 * s["spec_rounds"]
+    assert 1.0 <= s["mean_accept_len"] <= 4.0
+
+
+def test_spec_contiguous_pool_bit_exact():
+    """The contiguous (non-paged) pool takes the multi-row write path
+    through ``c.at[bidx, idx].set(..., mode="drop")`` — same exactness
+    contract, different rollback mechanics."""
+    cfg = _tiny("xla")
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    reqs = _trace(cfg, seed=4)
+    base = dict(max_batch=3, prompt_bucket=4)
+    _, plain = _run(params, cfg, ServingConfig(**base), reqs)
+    sched, spec = _run(params, cfg,
+                       ServingConfig(speculative=True, draft_mode="quant",
+                                     draft_k=3, **base), reqs)
+    for a, b in zip(plain, spec):
+        assert np.array_equal(a, b)
+    assert sched.decode_traces == 1 and sched.draft_traces == 1
+
+
+# ---------------------------------------------------------------------------
+# degenerate configs: draft_k=1 and draft==verify short-circuit
+# ---------------------------------------------------------------------------
+
+def test_spec_draft_k1_degenerates_to_plain_decode():
+    cfg = _tiny("xla")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _trace(cfg, seed=2)
+    base = dict(max_batch=3, prompt_bucket=4, paged=True, block_size=4)
+    _, plain = _run(params, cfg, ServingConfig(**base), reqs)
+    sched, spec = _run(params, cfg,
+                       ServingConfig(speculative=True, draft_mode="quant",
+                                     draft_k=1, **base), reqs)
+    assert sched._spec is None, "draft_k=1 must short-circuit"
+    assert sched.draft_traces == 0
+    assert sched.metrics.summary()["spec_rounds"] == 0
+    for a, b in zip(plain, spec):
+        assert np.array_equal(a, b)
+
+
+def test_spec_draft_equals_verify_short_circuits():
+    """Drafting with the verify mode itself would just run every step
+    twice — the scheduler must fall back to plain decode."""
+    cfg = _tiny("quant")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    sched = Scheduler(params, cfg,
+                      ServingConfig(max_batch=2, prompt_bucket=4,
+                                    speculative=True, draft_mode="quant",
+                                    draft_k=4))
+    assert sched._spec is None
+    rid = sched.submit_request(
+        make_request(np.array([1, 2, 3], np.int32), 4))
+    out = sched.run()
+    assert len(out[rid]) == 4
+    assert sched.draft_traces == 0
+
+
+# ---------------------------------------------------------------------------
+# adversarial rollback: sabotage the draft step
+# ---------------------------------------------------------------------------
+
+def _sabotage_drafts(sched):
+    """Wrap the jitted draft step so every draft token is off by one —
+    the verify pass must reject everything after position 0."""
+    spec = sched._spec
+    orig = spec._draft
+
+    def bad_draft(p, tokens, pos, active, caches, tables):
+        tok, logits, caches = orig(p, tokens, pos, active, caches, tables)
+        return (tok + 1) % sched.cfg.vocab_size, logits, caches
+
+    spec._draft = bad_draft
+
+
+def test_spec_all_rejected_makes_forward_progress():
+    """Even a draft that is wrong at every position must emit exactly
+    one (verify-mode) token per round — same final generations, one
+    accepted token per verify step."""
+    cfg = _tiny("xla")
+    params = M.init_params(cfg, jax.random.PRNGKey(5))
+    reqs = _trace(cfg, seed=6)
+    base = dict(max_batch=3, prompt_bucket=4, paged=True, block_size=4)
+    _, plain = _run(params, cfg, ServingConfig(**base), reqs)
+
+    scfg = ServingConfig(speculative=True, draft_mode="quant", draft_k=4,
+                         **base)
+    sched = Scheduler(params, cfg, scfg)
+    _sabotage_drafts(sched)
+    rids = [sched.submit_request(make_request(r.prompt, r.max_new_tokens))
+            for r in reqs]
+    out = sched.run()
+    for a, rid in zip(plain, rids):
+        assert np.array_equal(a, out[rid])
+    s = sched.metrics.summary()
+    assert s["mean_accept_len"] == 1.0
+    assert set(s["accept_len_hist"]) == {1}
+    assert s["accepted_tokens"] == s["spec_rounds"]
+
+
+def test_spec_rollback_across_paged_block_boundary():
+    """Acceptance/rejection landing on paged-block boundaries: with
+    block_size=4 and draft_k=4 every verify run straddles two KV blocks
+    at some round.  Sabotaged drafts force a rollback at every round —
+    the rejected rows' garbage KV sits in the *next* block and must be
+    invisible after the non-advance."""
+    cfg = _tiny("xla")
+    params = M.init_params(cfg, jax.random.PRNGKey(7))
+    rng = np.random.default_rng(8)
+    # prompt lengths 3 and 5 put the first verify runs mid-block and
+    # block-straddling respectively; long budgets cross several blocks
+    reqs = [make_request(rng.integers(1, cfg.vocab_size, p), g)
+            for p, g in ((3, 12), (5, 10), (4, 11))]
+    base = dict(max_batch=3, prompt_bucket=4, paged=True, block_size=4)
+    _, plain = _run(params, cfg, ServingConfig(**base), reqs)
+
+    sched = Scheduler(params, cfg,
+                      ServingConfig(speculative=True, draft_mode="quant",
+                                    draft_k=4, **base))
+    _sabotage_drafts(sched)
+    rids = [sched.submit_request(make_request(r.prompt, r.max_new_tokens))
+            for r in reqs]
+    out = sched.run()
+    for i, (a, rid) in enumerate(zip(plain, rids)):
+        assert np.array_equal(a, out[rid]), \
+            f"request {i} diverged across a block boundary"
+    assert sched.decode_traces == 1
+
+
+# ---------------------------------------------------------------------------
+# fleet drill: replica killed mid-speculation
+# ---------------------------------------------------------------------------
+
+def test_spec_router_kill_mid_verify_bit_exact():
+    """A replica killed while its slots are mid-speculative-round must
+    drain and requeue; the rerun restarts from the prompt, so the fleet
+    results stay bit-identical to a single-scheduler oracle."""
+    cfg = _smoke()
+    params = M.init_params(cfg, jax.random.PRNGKey(9))
+    rng = np.random.default_rng(10)
+    reqs = [make_request(rng.integers(1, cfg.vocab_size, p), g)
+            for p, g in ((6, 8), (5, 9), (7, 6), (4, 8), (6, 7))]
+    scfg = ServingConfig(max_batch=2, prompt_bucket=8, paged=True,
+                         block_size=8, speculative=True, draft_mode="quant",
+                         draft_k=3)
+    _, oracle = _run(params, cfg, scfg, reqs)
+
+    class FakeClock:
+        def __init__(self, t=0.0):
+            self.t = t
+
+        def __call__(self):
+            return self.t
+
+    router = Router(params, cfg, scfg,
+                    RouterConfig(n_replicas=2, policy="round_robin"),
+                    devices=jax.devices()[:2], clock=FakeClock(1.0),
+                    failure_plan=FailurePlan(kill_replica=0, at_step=1))
+    fresh = [make_request(r.prompt, r.max_new_tokens) for r in reqs]
+    for r in fresh:
+        router.submit_request(r)
+    results = router.run()
+    assert router.rebalanced_requests > 0, "kill must catch in-flight work"
+    for i, r in enumerate(fresh):
+        assert np.array_equal(results[r.rid], oracle[i]), i
+
+
+# ---------------------------------------------------------------------------
+# validation + the acceptance rule itself
+# ---------------------------------------------------------------------------
+
+def test_spec_config_validation():
+    smoke = _smoke()
+    with pytest.raises(ValueError, match="draft_mode"):
+        Scheduler(None, smoke, ServingConfig(speculative=True,
+                                             draft_mode="nope"))
+    with pytest.raises(ValueError, match="draft_k"):
+        Scheduler(None, smoke, ServingConfig(speculative=True, draft_k=0))
+    windowed = smoke.scaled(sliding_window=8)
+    with pytest.raises(ValueError, match="sliding_window"):
+        Scheduler(None, windowed, ServingConfig(speculative=True,
+                                                draft_mode="quant"))
+
+
+def test_accept_length_rule():
+    f = np.array
+    # verify[0] is always accepted; each matching draft extends the run
+    assert accept_length(f([7, 1, 2, 3]), f([1, 2, 3, 4])) == 4
+    assert accept_length(f([7, 1, 2, 3]), f([1, 2, 9, 4])) == 3
+    assert accept_length(f([7, 1, 2, 3]), f([1, 9, 3, 4])) == 2
+    assert accept_length(f([7, 1, 2, 3]), f([9, 1, 2, 3])) == 1
+    # a later "re-match" after a mismatch must NOT extend the prefix
+    assert accept_length(f([7, 1, 2, 3]), f([9, 2, 3, 4])) == 1
+    assert accept_length(f([5]), f([8])) == 1

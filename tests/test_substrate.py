@@ -1,5 +1,4 @@
 """Substrate: data determinism, optimizer, checkpoints, fault tolerance."""
-import os
 
 import jax
 import jax.numpy as jnp

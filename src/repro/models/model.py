@@ -257,9 +257,18 @@ def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
             valid = (r[None, :] < ring) & in_ring
             blk = block_tables[jnp.arange(b), widx // bs_blk]
         else:
+            # Same out-of-capacity guard as the s > 1 run above: the
+            # speculative draft pass drives this single-token path up to
+            # draft_k - 2 rows past a slot's last reserved position, where
+            # the clamped table gather would resolve to the slot's *last
+            # real block* and overwrite a committed row with draft-mode
+            # bits the verify step never rewrites.  Route those writes to
+            # the trash block instead.
             widx = pos
             valid = r[None, :] <= pos[:, None]
-            blk = block_tables[jnp.arange(b), widx // bs_blk]
+            blk = block_tables[jnp.arange(b),
+                               jnp.minimum(widx, lcap - 1) // bs_blk]
+            blk = jnp.where(widx < lcap, blk, 0)
         off = widx % bs_blk
 
         def put(c, new):
@@ -306,12 +315,24 @@ def _self_attention(x, p, cfg: ModelConfig, positions, mode, cache, pos,
             def put(c, new):
                 return c.at[bidx, idx].set(new.astype(c.dtype), mode="drop")
         elif per_slot:
-            # each slot writes its token at its own cache index
-            idx = pos % cap
+            # each slot writes its token at its own cache index: modulo the
+            # ring for sliding windows, else the absolute position with
+            # out-of-capacity writes dropped — the speculative draft pass
+            # steps this path past a slot's last row, and the unconditional
+            # `% cap` wrap would land that garbage on live row 0 (the same
+            # hazard the s > 1 run above drops)
             bidx = jnp.arange(b)
+            if cfg.sliding_window:
+                idx = pos % cap
 
-            def put(c, new):
-                return c.at[bidx, idx].set(new[:, 0].astype(c.dtype))
+                def put(c, new):
+                    return c.at[bidx, idx].set(new[:, 0].astype(c.dtype))
+            else:
+                idx = pos
+
+                def put(c, new):
+                    return c.at[bidx, idx].set(new[:, 0].astype(c.dtype),
+                                               mode="drop")
         else:
             idx = pos % cap
 

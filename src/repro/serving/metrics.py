@@ -72,10 +72,12 @@ class ServingMetrics:
         self.prefill_chunks = 0     # chunked-prefill calls (first + resumed)
         self.packed_prefills = 0    # multi-segment packed prefill calls
         # speculative decode (one on_spec_round per active slot per round):
-        # acceptance lengths (pre-clip verify agreement, 1..draft_k) feed
-        # the histogram; drafted/verified/accepted token counters give the
-        # draft hit rate and the per-verify-step yield
-        self.accept_len_samples: List[int] = []
+        # acceptance lengths (pre-clip verify agreement, 1..draft_k) are
+        # accumulated as a bounded counter keyed by length — draft_k is
+        # small and fixed, so unlike a per-sample list this never grows
+        # with server lifetime; drafted/verified/accepted token counters
+        # give the draft hit rate and the per-verify-step yield
+        self.accept_len_counts: Dict[int, int] = {}
         self.spec_rounds = 0
         self.drafted_tokens = 0     # tokens the cheap draft mode proposed
         self.verified_tokens = 0    # positions the verify step checked
@@ -153,7 +155,8 @@ class ServingMetrics:
         self.drafted_tokens += drafted
         self.verified_tokens += verified
         self.accepted_tokens += accepted
-        self.accept_len_samples.append(accept_len)
+        self.accept_len_counts[accept_len] = (
+            self.accept_len_counts.get(accept_len, 0) + 1)
 
     # ------------------------------------------------------------------
 
@@ -181,7 +184,8 @@ class ServingMetrics:
             out.deferred_admits += m.deferred_admits
             out.prefill_chunks += m.prefill_chunks
             out.packed_prefills += m.packed_prefills
-            out.accept_len_samples.extend(m.accept_len_samples)
+            for k, v in m.accept_len_counts.items():
+                out.accept_len_counts[k] = out.accept_len_counts.get(k, 0) + v
             out.spec_rounds += m.spec_rounds
             out.drafted_tokens += m.drafted_tokens
             out.verified_tokens += m.verified_tokens
@@ -273,11 +277,13 @@ class ServingMetrics:
             "accepted_tokens": self.accepted_tokens,
             "accepted_per_step": (self.accepted_tokens / self.spec_rounds
                                   if self.spec_rounds else math.nan),
-            "mean_accept_len": self._mean(
-                [float(a) for a in self.accept_len_samples]),
+            "mean_accept_len": (
+                sum(k * v for k, v in self.accept_len_counts.items())
+                / sum(self.accept_len_counts.values())
+                if self.accept_len_counts else math.nan),
             "accept_len_hist": {
-                k: self.accept_len_samples.count(k)
-                for k in sorted(set(self.accept_len_samples))},
+                k: self.accept_len_counts[k]
+                for k in sorted(self.accept_len_counts)},
             # prefix caching: hit rate over admitted requests, prompt
             # tokens served straight from the index (no prefill compute),
             # and the TTFT split that the warm/cold benchmark gate reads

@@ -337,7 +337,7 @@ class Scheduler:
         # single "last deferred rid" would recount the original head when
         # it defers again after an interloper
         self._deferred_rids: set = set()
-        self.decode_traces = 0      # python-body executions == jit retraces
+        self._plain_decode_traces = 0   # retraces of the plain (B, 1) jit
 
         # speculative decode: active only when a round can beat plain
         # decode — draft_k=1 drafts nothing (the verify step *is* plain
@@ -354,7 +354,7 @@ class Scheduler:
 
         def _step(p, tokens, pos, active, caches, tables):
             # tables is None (an empty pytree to jit) for the contiguous pool
-            self.decode_traces += 1
+            self._plain_decode_traces += 1
             return M.decode_step_slots(p, tokens, pos, active, caches, cfg,
                                        block_tables=tables)
 
@@ -391,6 +391,17 @@ class Scheduler:
     @property
     def n_active(self) -> int:
         return int(self.active_slots.sum())
+
+    @property
+    def decode_traces(self) -> int:
+        """Retraces of the batched decode step — the plain (B, 1) jit,
+        plus, under speculation, the (B, k) verify jit (which *is* the
+        decode step there).  Summing keeps both visible: if some future
+        path ever mixes plain and speculative rounds, a retrace of either
+        jit trips the existing "exactly one trace" assertions instead of
+        being masked.  Tests pin this to 1."""
+        verify = self._spec.verify_traces if self._spec is not None else 0
+        return self._plain_decode_traces + verify
 
     @property
     def draft_traces(self) -> int:
@@ -873,9 +884,6 @@ class Scheduler:
             self.params, self._tokens, self._pos, active,
             self.pool.caches, self.pool.block_tables)
         self.pool.caches = new_caches
-        # the verify step is the decode step: surface its retrace count
-        # where every existing "exactly one trace" assertion looks
-        self.decode_traces = spec.verify_traces
         now = self.clock()
         for slot in np.flatnonzero(active):
             rid = int(self._slot_rid[slot])

@@ -9,8 +9,13 @@ property.  This module turns it into throughput.  One round:
 1. **Draft**: the cheap mode (``draft_mode``, e.g. ``"quant"``) runs
    ``k - 1`` ordinary single-token decode steps from the batch's current
    tokens, producing a candidate run per slot.  Drafting shares the KV
-   pool (its writes land at the run's positions and are overwritten by
-   the verify step below) and the compiled-artifact cache, but executes
+   pool: its writes land at the run's positions and are overwritten by
+   the verify step below, and — for a slot within ``k - 2`` rows of
+   capacity — writes past the last reserved row are discarded by the
+   model's guarded per-slot write paths (trash-block routing / drop
+   semantics, the same guard the verify run applies), never wrapped or
+   clamped onto live rows.  Drafting also shares the compiled-artifact
+   cache, but executes
    inside :func:`repro.pim.engine.draft_ctx`, whose ``"draft"`` session
    namespace keeps its crossbar-state uploads from LRU-evicting the
    verify path's resident :class:`~repro.pim.engine.ExecutionSession`

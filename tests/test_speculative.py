@@ -14,6 +14,7 @@ step.
 import contextlib
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -214,6 +215,85 @@ def test_spec_rollback_across_paged_block_boundary():
         assert np.array_equal(a, out[rid]), \
             f"request {i} diverged across a block boundary"
     assert sched.decode_traces == 1
+
+
+@pytest.mark.parametrize("paged", [True, False], ids=["paged", "contiguous"])
+def test_single_token_write_past_capacity_is_discarded(paged):
+    """The draft pass's KV-write invariant, asserted on the cache bits
+    directly: a single-token ``decode_step_slots`` at ``pos >= capacity``
+    (where the speculative draft loop drives it for slots near the end of
+    their budget) must leave every committed row untouched — the paged
+    path routes the write to the reserved trash block 0 and the contiguous
+    path drops it.  Unguarded, the paged path's clamped block-table gather
+    lands the write in the slot's *last real block* and the contiguous
+    path's ``% cap`` wrap lands it on row 0."""
+    cfg = _tiny("xla")
+    params = M.init_params(cfg, jax.random.PRNGKey(11))
+    b, bs = 2, 4
+    tok = jnp.asarray(np.array([[5], [7]], np.int32))
+    active = jnp.ones(b, bool)
+    if paged:
+        nblocks = 2 * (cfg.max_seq_len // bs) + 1
+        specs = M.paged_cache_specs(cfg, b, cfg.max_seq_len, nblocks, bs)
+        # slot 0 owns blocks 1..12 (full reservation), slot 1 blocks 13..24
+        bps = cfg.max_seq_len // bs
+        tables = jnp.asarray(np.arange(1, 2 * bps + 1,
+                                       dtype=np.int32).reshape(b, bps))
+        lcap = bps * bs
+        pos = jnp.asarray(np.array([lcap, lcap + 1], np.int32))
+    else:
+        specs = M.cache_specs(cfg, b, cfg.max_seq_len)
+        tables = None
+        pos = jnp.asarray(np.full(b, cfg.max_seq_len, np.int32))
+    caches = jax.tree.map(lambda s: jnp.ones(s.shape, s.dtype), specs)
+    _, _, new = M.decode_step_slots(params, tok, pos, active, caches, cfg,
+                                    block_tables=tables)
+    for key, before in caches["0"].items():
+        after = new["0"][key]
+        if paged:
+            # everything but the trash block must be bit-identical
+            assert np.array_equal(np.asarray(after[:, 1:]),
+                                  np.asarray(before[:, 1:])), \
+                f"{key}: past-capacity write escaped the trash block"
+        else:
+            assert np.array_equal(np.asarray(after), np.asarray(before)), \
+                f"{key}: past-capacity write was not dropped"
+
+
+@pytest.mark.parametrize("paged", [True, False], ids=["paged", "contiguous"])
+def test_spec_request_at_pool_capacity_bit_exact(paged):
+    """A request whose prompt + budget equals the pool capacity drives the
+    draft pass's single-token decode writes up to ``draft_k - 2`` rows past
+    the slot's last reserved position.  Those writes must be discarded the
+    same way the verify run's are — routed to the paged pool's trash block,
+    or dropped by the contiguous path — because the unguarded fallbacks
+    corrupt *live* rows: the clamped block-table gather lands on the slot's
+    last real block (a committed row the verify step never rewrites) and
+    the contiguous ``% cap`` wrap lands on row 0.  Sabotaged drafts advance
+    ``pos`` by exactly one per round, so the final rounds deterministically
+    start at capacity - 2 and capacity - 1 and the corrupted row would be
+    read back before the request finishes."""
+    cfg = _tiny("xla")
+    params = M.init_params(cfg, jax.random.PRNGKey(11))
+    rng = np.random.default_rng(12)
+    cap = cfg.max_seq_len               # per-slot pool capacity (48)
+    prompt = rng.integers(1, cfg.vocab_size, 4)
+    budget = cap - len(prompt)          # prompt + budget == capacity
+    base = dict(max_batch=2, prompt_bucket=4)
+    if paged:
+        base.update(paged=True, block_size=4)
+    _, plain = _run(params, cfg, ServingConfig(**base),
+                    [make_request(prompt, budget)])
+
+    sched = Scheduler(params, cfg,
+                      ServingConfig(speculative=True, draft_mode="quant",
+                                    draft_k=4, **base))
+    _sabotage_drafts(sched)
+    rid = sched.submit_request(make_request(prompt, budget))
+    out = sched.run()
+    assert np.array_equal(plain[0], out[rid]), \
+        "capacity-boundary generation diverged: a past-capacity draft " \
+        "write corrupted a live KV row"
 
 
 # ---------------------------------------------------------------------------
